@@ -1,0 +1,49 @@
+"""Claim C6: solution quality of the parallel designs matches the sequential
+code (paper §V: "results are similar to those obtained by the sequential
+code"). Gap-to-optimum on circle instances (known optimum by construction)
+after equal iteration budgets, plus the sequential reference."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import aco, sequential, tsp
+
+CASES = ((48, 60), (100, 80))
+
+
+def rows(cases=CASES):
+    out = []
+    for n, iters in cases:
+        inst = tsp.circle_instance(n, seed=n)
+        opt = inst.known_optimum
+        seq = sequential.SequentialAS(inst.distances(), m=n, seed=1)
+        seq.run(iters)
+        r = {"n": n, "iters": iters, "optimum": opt,
+             "seq_gap_pct": 100 * (seq.best_len / opt - 1)}
+        for name, cfg in (
+            ("iroulette", aco.ACOConfig(iterations=iters)),
+            ("gumbel", aco.ACOConfig(iterations=iters, selection="gumbel")),
+            ("nnlist", aco.ACOConfig(iterations=iters, construction="nn_list")),
+            ("pallas", aco.ACOConfig(iterations=iters, use_pallas=True)),
+            ("mmas", aco.ACOConfig(iterations=iters, variant="mmas",
+                                   selection="gumbel")),
+        ):
+            st = aco.run(inst, cfg)
+            r[f"{name}_gap_pct"] = 100 * (float(st.best_len) / opt - 1)
+        out.append(r)
+    return out
+
+
+def main(cases=CASES):
+    print("quality (gap-to-known-optimum %, equal iteration budget)")
+    hdr = None
+    for r in rows(cases):
+        if hdr is None:
+            hdr = list(r.keys())
+            print(",".join(hdr))
+        print(",".join(f"{r[k]:.2f}" if isinstance(r[k], float) else str(r[k])
+                       for k in hdr))
+
+
+if __name__ == "__main__":
+    main()

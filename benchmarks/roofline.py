@@ -1,0 +1,85 @@
+"""Roofline table builder: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and renders the §Roofline table with the three terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs utilisation, and a one-line
+what-would-move-it note per cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+NOTES = {
+    "compute_s": "compute-bound: raise MXU utilisation (larger per-device "
+                 "tiles, fewer pad FLOPs) or shrink redundant recompute",
+    "memory_s": "HBM-bound: fuse elementwise chains, cut activation "
+                "round-trips (remat policy), widen arithmetic intensity",
+    "collective_s": "ICI-bound: reshard to cut gather volume, overlap "
+                    "collectives with compute, compress payloads",
+}
+
+
+def load(dirpath: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bottleneck | useful/HLO flops | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | —"
+                         f" | — | skipped | — | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | —"
+                         f" | — | FAILED | — | {r.get('error','')[:60]} |")
+            continue
+        t = r["roofline"]
+        ur = t.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | {t['bottleneck'][:-2]} "
+            f"| {ur:.2f} | {NOTES[t['bottleneck']][:48]} |"
+            if ur is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ? | ? | ? | ? | ? | |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        print("no dryrun records found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return
+    ok = [r for r in recs if r["status"] == "ok"]
+    table = render(recs)
+    print(table)
+    print()
+    summary = (f"# cells: {len(ok)} ok / "
+               f"{sum(r['status'] == 'skipped' for r in recs)} skipped / "
+               f"{sum(r['status'] == 'fail' for r in recs)} failed")
+    print(summary)
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "roofline.md")
+    try:
+        with open(out, "w") as f:
+            f.write("# Roofline table (final sweep; see EXPERIMENTS.md "
+                    "§Roofline for methodology)\n\n" + table + "\n\n"
+                    + summary + "\n")
+    except OSError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

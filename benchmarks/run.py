@@ -1,0 +1,49 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,...]
+
+Prints CSV blocks per table. --full uses the paper's larger instances
+(minutes on one CPU core); default sizes keep the whole suite ~2-4 min.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig4_overall, fig5_pheromone, quality, roofline,
+               table2_tour_construction, table3_pheromone)
+
+TABLES = {
+    "table2": lambda full: table2_tour_construction.main(
+        table2_tour_construction.FULL_SIZES if full
+        else table2_tour_construction.SIZES),
+    "table3": lambda full: table3_pheromone.main(
+        table3_pheromone.FULL_SIZES if full else table3_pheromone.SIZES),
+    "fig4": lambda full: fig4_overall.main(
+        fig4_overall.FULL_SIZES if full else fig4_overall.SIZES),
+    "fig5": lambda full: fig5_pheromone.main(fig5_pheromone.SIZES),
+    "quality": lambda full: quality.main(),
+    "roofline": lambda full: roofline.main(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(TABLES))
+    args = ap.parse_args()
+    names = list(TABLES) if not args.only else args.only.split(",")
+    for name in names:
+        if name not in TABLES:
+            print(f"unknown table {name}", file=sys.stderr)
+            continue
+        t0 = time.time()
+        print(f"==== {name} " + "=" * 50)
+        TABLES[name](args.full)
+        print(f"---- {name} done in {time.time()-t0:.1f}s\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

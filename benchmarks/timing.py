@@ -1,0 +1,37 @@
+"""Shared benchmark timing helpers (block_until_ready, warmup, best-of-k)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kwargs) -> float:
+    """Median wall-time in milliseconds of fn(*args) with device sync."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e3
+
+
+def time_host_fn(fn: Callable, *args, warmup: int = 0, iters: int = 3,
+                 **kwargs) -> float:
+    """Median wall-time (ms) of a host (numpy) function."""
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e3

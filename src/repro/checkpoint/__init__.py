@@ -1,0 +1,5 @@
+from .checkpoint import (CheckpointManager, load_pytree, reshard_islands,
+                         restore_to_sharding, save_pytree)
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree",
+           "restore_to_sharding", "reshard_islands"]

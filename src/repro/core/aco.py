@@ -1,0 +1,203 @@
+"""The ACO engine: Ant System (paper's subject) plus MMAS / ACS variants.
+
+State is a pytree (``ColonyState``) so that one colony step jits cleanly,
+scans across iterations, shards across mesh axes (islands.py) and round-trips
+through checkpoints (checkpoint/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pheromone, strategies, tsp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ACOConfig:
+    # Paper/Dorigo-Stützle recommended defaults.
+    alpha: float = 1.0
+    beta: float = 2.0
+    rho: float = 0.5
+    q: float = 1.0                 # deposit numerator (1/C^k scaled by q)
+    m: Optional[int] = None        # ants; None => m = n (paper §V)
+    variant: str = "as"            # as | mmas | acs
+    construction: str = "data_parallel"
+    selection: str = "iroulette"   # iroulette (paper) | gumbel (exact) | roulette
+    nn_k: int = 30                 # NN-list length (paper uses 30)
+    deposit: str = "scatter"       # pheromone strategy (see pheromone.py)
+    deposit_tile: int = 64
+    iterations: int = 100
+    seed: int = 0
+    use_pallas: bool = False       # route choice/tour/deposit through kernels/
+    # MMAS
+    mmas_best: str = "iteration"   # iteration | global
+    # ACS
+    q0: float = 0.9
+    xi: float = 0.1
+
+    def num_ants(self, n: int) -> int:
+        return self.m if self.m is not None else n
+
+
+class ColonyState(NamedTuple):
+    tau: Array            # (n, n) pheromone
+    best_tour: Array      # (n,) int32
+    best_len: Array       # () float32
+    iteration: Array      # () int32
+    key: Array            # PRNG key
+
+
+class Problem(NamedTuple):
+    """Device-resident constants for one TSP instance."""
+    dist: Array           # (n, n) float32
+    eta: Array            # (n, n) float32  (1/d)
+    nn: Array             # (n, k) int32
+
+
+def make_problem(instance: tsp.TSPInstance, nn_k: int = 30) -> Problem:
+    dist = jnp.asarray(instance.distances())
+    eta = tsp.heuristic_matrix(dist)
+    nn = tsp.nn_lists(dist, min(nn_k, instance.n - 1))
+    return Problem(dist, eta, nn)
+
+
+def initial_tau(instance: tsp.TSPInstance, cfg: ACOConfig) -> float:
+    """tau0 = m / C_nn (AS), 1/(rho C_nn) (MMAS), 1/(n C_nn) (ACS)."""
+    d = instance.distances()
+    _, c_nn = tsp.nearest_neighbour_tour(d)
+    n = instance.n
+    m = cfg.num_ants(n)
+    if cfg.variant == "mmas":
+        return 1.0 / (cfg.rho * c_nn)
+    if cfg.variant == "acs":
+        return 1.0 / (n * c_nn)
+    return m / c_nn
+
+
+def init_colony(instance: tsp.TSPInstance, cfg: ACOConfig,
+                seed: Optional[int] = None) -> ColonyState:
+    n = instance.n
+    tau0 = initial_tau(instance, cfg)
+    key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+    return ColonyState(
+        tau=jnp.full((n, n), tau0, jnp.float32),
+        best_tour=jnp.arange(n, dtype=jnp.int32),
+        best_len=jnp.asarray(np.float32(np.inf)),
+        iteration=jnp.asarray(0, jnp.int32),
+        key=key,
+    )
+
+
+def _choice(tau: Array, eta: Array, cfg: ACOConfig) -> Array:
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.choice_info(tau, eta, cfg.alpha, cfg.beta)
+    return strategies.choice_matrix(tau, eta, cfg.alpha, cfg.beta)
+
+
+def _deposit_weights(lengths: Array, cfg: ACOConfig) -> Array:
+    return cfg.q / lengths
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def colony_step(problem: Problem, state: ColonyState,
+                cfg: ACOConfig) -> tuple[ColonyState, Array]:
+    """One full ACO iteration: construct m tours, update pheromone, track best.
+
+    Returns (new_state, iteration_best_length).
+    """
+    n = problem.dist.shape[0]
+    m = cfg.num_ants(n)
+    key, k_tour = jax.random.split(state.key)
+
+    choice_info = _choice(state.tau, problem.eta, cfg)
+
+    method = cfg.construction
+    if cfg.use_pallas and method == "data_parallel":
+        method = "pallas"          # kernels/tour_select via the step registry
+
+    res = strategies.construct_tours(
+        k_tour, problem.dist, choice_info, m,
+        method=method, selection=cfg.selection,
+        nn=problem.nn, tau=state.tau, eta=problem.eta,
+        alpha=cfg.alpha, beta=cfg.beta,
+    )
+
+    it_best_idx = jnp.argmin(res.lengths)
+    it_best_len = res.lengths[it_best_idx]
+    it_best_tour = res.tours[it_best_idx]
+
+    improved = it_best_len < state.best_len
+    best_len = jnp.where(improved, it_best_len, state.best_len)
+    best_tour = jnp.where(improved, it_best_tour, state.best_tour)
+
+    if cfg.variant == "as":
+        w = _deposit_weights(res.lengths, cfg)
+        dep_tours, dep_w = res.tours, w
+    elif cfg.variant == "mmas":
+        if cfg.mmas_best == "global":
+            dep_tours = best_tour[None, :]
+            dep_w = (cfg.q / best_len)[None]
+        else:
+            dep_tours = it_best_tour[None, :]
+            dep_w = (cfg.q / it_best_len)[None]
+    elif cfg.variant == "acs":
+        dep_tours = best_tour[None, :]
+        dep_w = (cfg.rho * cfg.q / best_len)[None]
+    else:
+        raise ValueError(f"unknown variant {cfg.variant}")
+
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        tau = kops.pheromone_update(state.tau, dep_tours, dep_w, cfg.rho)
+    else:
+        tau = pheromone.update(state.tau, dep_tours, dep_w, cfg.rho,
+                               strategy=cfg.deposit, tile=cfg.deposit_tile)
+
+    if cfg.variant == "mmas":
+        tau_max = cfg.q / (cfg.rho * best_len)
+        tau_min = tau_max / (2.0 * n)
+        tau = jnp.clip(tau, tau_min, tau_max)
+    elif cfg.variant == "acs":
+        # Parallel-ACS local rule: decay edges crossed this iteration.
+        f, t = pheromone.tour_edges(res.tours)
+        tau0 = cfg.q / (n * jnp.maximum(best_len, 1e-9))
+        tau = pheromone.local_update_acs(tau, f.ravel(), t.ravel(), cfg.xi, tau0)
+
+    new_state = ColonyState(tau, best_tour, best_len,
+                            state.iteration + 1, key)
+    return new_state, it_best_len
+
+
+def run(instance: tsp.TSPInstance, cfg: ACOConfig,
+        state: Optional[ColonyState] = None,
+        checkpoint_cb=None, checkpoint_every: int = 0) -> ColonyState:
+    """Python-loop driver (checkpointable); inner step is jitted."""
+    problem = make_problem(instance, cfg.nn_k)
+    if state is None:
+        state = init_colony(instance, cfg)
+    start = int(state.iteration)
+    for i in range(start, cfg.iterations):
+        state, _ = colony_step(problem, state, cfg)
+        if checkpoint_cb and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            checkpoint_cb(state)
+    return state
+
+
+@partial(jax.jit, static_argnames=("cfg", "iterations"))
+def run_scan(problem: Problem, state: ColonyState, cfg: ACOConfig,
+             iterations: int) -> tuple[ColonyState, Array]:
+    """Fused multi-iteration driver (benchmarks / island inner loop)."""
+
+    def body(st, _):
+        st, it_best = colony_step(problem, st, cfg)
+        return st, it_best
+
+    return jax.lax.scan(body, state, None, length=iterations)

@@ -1,0 +1,168 @@
+"""Pheromone-update strategies (paper §IV.B, Tables III/IV).
+
+Strategy ladder, mirroring the paper's kernel versions:
+
+- ``scatter``     the TPU analogue of the paper's winning *atomic* version:
+                  XLA scatter-add of 1/C^k along each ant's tour edges.
+                  (TPU has no atomics; XLA serialises colliding updates in a
+                  sorted scatter — semantically identical to atomicAdd.)
+- ``reduction``   the paper's Instruction & Thread *Reduction* version:
+                  symmetric TSP => canonicalise each edge to (lo, hi) and
+                  scatter only the upper triangle, half the update work, then
+                  mirror.
+- ``s2g``         honest *scatter-to-gather* (paper Fig. 3): every pheromone
+                  cell scans every tour edge — O(n^4) work for m = n. Kept
+                  deliberately faithful so the paper's Table III slow-down
+                  scaling (claim C4) is reproducible.
+- ``s2g_tiled``   scatter-to-gather with tile-blocked membership tests
+                  (paper's 'Tiling' version, tile = theta).
+- ``onehot``      TPU-native adaptation (DESIGN.md §2): deposit as a one-hot
+                  matmul D = F^T (w * T) over edge chunks. Same pure-gather
+                  memory pattern as s2g, but the membership test becomes MXU
+                  work. The Pallas kernel (kernels/pheromone_update.py)
+                  builds the one-hots in VMEM on the fly.
+
+All strategies produce identical tau (up to float associativity); asserted in
+tests/test_pheromone.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def evaporate(tau: Array, rho: float) -> Array:
+    """Eq. 2: tau <- (1 - rho) tau."""
+    return (1.0 - rho) * tau
+
+
+def tour_edges(tours: Array) -> tuple[Array, Array]:
+    """Directed edge endpoints (m, n) for closed tours."""
+    return tours, jnp.roll(tours, -1, axis=-1)
+
+
+def deposit_scatter(n: int, tours: Array, w: Array, symmetric: bool = True) -> Array:
+    """Atomic-analogue scatter-add (paper versions 1/2)."""
+    f, t = tour_edges(tours)
+    ns = tours.shape[-1]
+    wrep = jnp.broadcast_to(w[:, None], (w.shape[0], ns)).ravel()
+    d = jnp.zeros((n, n), jnp.float32).at[f.ravel(), t.ravel()].add(wrep)
+    if symmetric:
+        d = d + d.T
+    return d
+
+
+def deposit_reduction(n: int, tours: Array, w: Array) -> Array:
+    """Paper's Reduction version: half the scatters via edge canonicalisation."""
+    f, t = tour_edges(tours)
+    lo = jnp.minimum(f, t)
+    hi = jnp.maximum(f, t)
+    ns = tours.shape[-1]
+    wrep = jnp.broadcast_to(w[:, None], (w.shape[0], ns)).ravel()
+    upper = jnp.zeros((n, n), jnp.float32).at[lo.ravel(), hi.ravel()].add(wrep)
+    return upper + upper.T
+
+
+@partial(jax.jit, static_argnames=("n", "row_tile", "col_tile"))
+def deposit_s2g(n: int, tours: Array, w: Array, row_tile: int = 0,
+                col_tile: int = 0) -> Array:
+    """Scatter-to-gather: cell (i,j) gathers over ALL m*n edges (paper Fig. 3).
+
+    row_tile/col_tile = 0 means untiled semantics (single tile). The tiled
+    variant is the paper's 'Scatter to Gather + Tiling'; tiles bound the
+    VMEM-resident membership masks exactly like the paper's shared-memory
+    tiles. Work is O(n^2 * m * n) regardless of tiling — that is the point.
+    """
+    f, t = tour_edges(tours)
+    m, ns = f.shape
+    bi = row_tile or min(n, 64)
+    bj = col_tile or min(n, 64)
+    # pad n up to multiples
+    ni = -(-n // bi) * bi
+    nj = -(-n // bj) * bj
+    fw = (f.ravel(), (w[:, None] * jnp.ones((m, ns), jnp.float32)).ravel())
+    tr = t.ravel()
+
+    def row_block(i0):
+        rows = i0 + jnp.arange(bi)
+        mi = (fw[0][None, :] == rows[:, None]).astype(jnp.float32)  # (bi, E)
+        mi = mi * fw[1][None, :]
+
+        def col_block(j0):
+            cols = j0 + jnp.arange(bj)
+            mj = (tr[None, :] == cols[:, None]).astype(jnp.float32)  # (bj, E)
+            return mi @ mj.T                                          # (bi, bj)
+
+        blocks = jax.lax.map(col_block, jnp.arange(0, nj, bj))       # (k, bi, bj)
+        return blocks.transpose(1, 0, 2).reshape(bi, nj)
+
+    rows = jax.lax.map(row_block, jnp.arange(0, ni, bi))   # (ni/bi, bi, nj)
+    d = rows.reshape(ni, nj)[:n, :n]
+    return d + d.T
+
+
+@partial(jax.jit, static_argnames=("n", "chunk"))
+def deposit_onehot(n: int, tours: Array, w: Array, chunk: int = 8) -> Array:
+    """TPU-native deposit: D = F^T (w*T) accumulated over ant chunks.
+
+    F/T are (chunk*ns, n) one-hot matrices, never larger than one chunk.
+    """
+    f, t = tour_edges(tours)
+    m, ns = f.shape
+    c = min(chunk, m)
+    pad = (-m) % c
+    if pad:
+        f = jnp.concatenate([f, jnp.zeros((pad, ns), f.dtype)], 0)
+        t = jnp.concatenate([t, jnp.zeros((pad, ns), t.dtype)], 0)
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)], 0)
+    nchunks = f.shape[0] // c
+
+    def body(acc, i):
+        fs = jax.lax.dynamic_slice_in_dim(f, i * c, c).ravel()
+        ts = jax.lax.dynamic_slice_in_dim(t, i * c, c).ravel()
+        ws = jnp.repeat(jax.lax.dynamic_slice_in_dim(w, i * c, c), ns)
+        F = jax.nn.one_hot(fs, n, dtype=jnp.float32)
+        T = jax.nn.one_hot(ts, n, dtype=jnp.float32) * ws[:, None]
+        return acc + F.T @ T, None
+
+    d0 = jnp.zeros((n, n), jnp.float32)
+    d, _ = jax.lax.scan(body, d0, jnp.arange(nchunks))
+    return d + d.T
+
+
+STRATEGIES = ("scatter", "reduction", "s2g", "s2g_tiled", "onehot")
+
+
+def deposit(n: int, tours: Array, w: Array, strategy: str = "scatter",
+            tile: int = 64) -> Array:
+    if strategy == "scatter":
+        return deposit_scatter(n, tours, w)
+    if strategy == "reduction":
+        return deposit_reduction(n, tours, w)
+    if strategy == "s2g":
+        return deposit_s2g(n, tours, w, 0, 0)
+    if strategy == "s2g_tiled":
+        return deposit_s2g(n, tours, w, tile, tile)
+    if strategy == "onehot":
+        return deposit_onehot(n, tours, w)
+    raise ValueError(f"unknown deposit strategy {strategy}")
+
+
+def update(tau: Array, tours: Array, w: Array, rho: float,
+           strategy: str = "scatter", tile: int = 64) -> Array:
+    """Full pheromone update: evaporation (eq. 2) + deposit (eq. 3/4)."""
+    n = tau.shape[0]
+    return evaporate(tau, rho) + deposit(n, tours, w, strategy, tile)
+
+
+def local_update_acs(tau: Array, frm: Array, to: Array, xi: float,
+                     tau0: float) -> Array:
+    """ACS local pheromone rule on the just-crossed edges (both directions)."""
+    upd = lambda m: (1 - xi) * m + xi * tau0
+    tau = tau.at[frm, to].set(upd(tau[frm, to]))
+    tau = tau.at[to, frm].set(upd(tau[to, frm]))
+    return tau

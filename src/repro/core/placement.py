@@ -1,0 +1,131 @@
+"""Beyond-paper integration: the ACO engine applied to the framework's own
+scheduling problem — layer-to-pipeline-stage placement (DESIGN.md §5).
+
+Problem: assign L heterogeneous layers (per-layer FLOP cost c_i, inter-layer
+activation traffic t_i) to S stages. Cost = max stage load (pipeline
+bottleneck) + lambda * sum of cut traffic (activations crossing stages).
+Contiguity is NOT assumed (mixture placements are valid for interleaved
+pipelines), so the search space is S^L — a combinatorial problem the AS
+engine handles the same way it handles the TSP: pheromone matrix (L, S),
+per-step I-Roulette over stages, evaporation + quality-weighted deposit.
+
+This reuses the paper's data-parallel construction pattern: all m ants pick
+stage assignments for layer i simultaneously (an (m, S) tensor op per step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sampling
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementProblem:
+    """Hashable (jit-static) problem description; costs stored as tuples."""
+    layer_costs: tuple             # (L,) per-layer compute cost
+    edge_traffic: tuple            # (L,) activation bytes out of layer i
+    n_stages: int
+    comm_lambda: float = 0.25      # traffic weight vs load balance
+
+    def __post_init__(self):
+        object.__setattr__(self, "layer_costs",
+                           tuple(float(x) for x in self.layer_costs))
+        object.__setattr__(self, "edge_traffic",
+                           tuple(float(x) for x in self.edge_traffic))
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_costs)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    ants: int = 64
+    iterations: int = 60
+    alpha: float = 1.0
+    beta: float = 2.0
+    rho: float = 0.3
+    q: float = 1.0
+    seed: int = 0
+
+
+def assignment_cost(prob: PlacementProblem, assign: Array) -> Array:
+    """assign (..., L) int32 -> scalar cost per assignment."""
+    c = jnp.asarray(prob.layer_costs, jnp.float32)
+    t = jnp.asarray(prob.edge_traffic, jnp.float32)
+    s = prob.n_stages
+    onehot = jax.nn.one_hot(assign, s, dtype=jnp.float32)  # (..., L, S)
+    loads = jnp.einsum("...ls,l->...s", onehot, c)
+    bottleneck = loads.max(-1)
+    cuts = (assign[..., 1:] != assign[..., :-1]).astype(jnp.float32)
+    comm = (cuts * t[:-1]).sum(-1)
+    return bottleneck + prob.comm_lambda * comm
+
+
+@partial(jax.jit, static_argnames=("prob", "cfg"))
+def _step(tau: Array, key: Array, prob: PlacementProblem,
+          cfg: PlacementConfig) -> tuple[Array, Array, Array]:
+    L = prob.n_layers
+    s = prob.n_stages
+    m = cfg.ants
+    c = jnp.asarray(prob.layer_costs, jnp.float32)
+    mean_load = c.sum() / s
+
+    def body(carry, i):
+        loads, prev = carry                     # (m, S), (m,)
+        k = jax.random.fold_in(key, i)
+        # heuristic: prefer under-loaded stages and staying on prev stage
+        head = 1.0 / (1.0 + loads / mean_load)              # (m, S)
+        stay = 1.0 + 0.5 * jax.nn.one_hot(prev, s)
+        w = (tau[i][None, :] ** cfg.alpha) * ((head * stay) ** cfg.beta)
+        pick = sampling.iroulette(k, w)                      # (m,)
+        loads = loads + jax.nn.one_hot(pick, s) * c[i]
+        return (loads, pick), pick
+
+    loads0 = jnp.zeros((m, s), jnp.float32)
+    prev0 = jnp.zeros((m,), jnp.int32)
+    (_, _), picks = jax.lax.scan(body, (loads0, prev0), jnp.arange(L))
+    assign = picks.T.astype(jnp.int32)                       # (m, L)
+    costs = assignment_cost(prob, assign)
+
+    # Elitist AS update: only the best quartile of ants deposits, weighted
+    # by solution quality (flat all-ants deposit washes out on this problem
+    # because costs cluster tightly around the balanced optimum).
+    thresh = jnp.quantile(costs, 0.25)
+    w = jnp.where(costs <= thresh,
+                  cfg.q * costs.min() / jnp.maximum(costs, 1e-9), 0.0)
+    dep = jnp.einsum("m,mls->ls", w,
+                     jax.nn.one_hot(assign, s, dtype=jnp.float32))
+    tau = (1 - cfg.rho) * tau + dep
+    best = jnp.argmin(costs)
+    return tau, assign[best], costs[best]
+
+
+def solve(prob: PlacementProblem, cfg: PlacementConfig = PlacementConfig()
+          ) -> tuple[np.ndarray, float]:
+    L = prob.n_layers
+    tau = jnp.full((L, prob.n_stages), 1.0, jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    best_a, best_c = None, np.inf
+    for it in range(cfg.iterations):
+        tau, a, cst = _step(tau, jax.random.fold_in(key, it), prob, cfg)
+        if float(cst) < best_c:
+            best_c = float(cst)
+            best_a = np.asarray(a)
+    return best_a, best_c
+
+
+def uniform_baseline(prob: PlacementProblem) -> tuple[np.ndarray, float]:
+    """Contiguous equal-layer-count split (the standard default)."""
+    L = prob.n_layers
+    s = prob.n_stages
+    assign = np.minimum((np.arange(L) * s) // L, s - 1).astype(np.int32)
+    return assign, float(assignment_cost(prob, jnp.asarray(assign)))

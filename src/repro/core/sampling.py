@@ -1,0 +1,73 @@
+"""Probabilistic next-city selection rules.
+
+Three selection semantics, matching DESIGN.md §2:
+
+- ``roulette``   exact categorical sampling by inverse-CDF (cumsum +
+                 searchsorted). This is the sequential algorithm's semantics
+                 (Stützle's ANSI-C code) and the paper's task-parallel baseline.
+- ``iroulette``  the paper's data-parallel scheme (Fig. 1): every city
+                 multiplies its choice value by an independent U(0,1] draw and
+                 an argmax-reduction picks the winner ("independent roulette").
+                 Not identical in distribution to roulette, but this is what
+                 the paper ships; kept for fidelity.
+- ``gumbel``     exact categorical sampling via the Gumbel-max trick —
+                 argmax(log w + G). Same data-parallel shape as iroulette but
+                 exact; the TPU gets this for free (beyond-paper default).
+
+All functions are batched: weights (..., n) -> choice (...,) int32. Invalid
+cities must already carry weight 0 (mask applied by the caller).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def roulette(key: Array, weights: Array) -> Array:
+    """Exact inverse-CDF sampling. weights (..., n) >= 0, not normalised."""
+    cdf = jnp.cumsum(weights, axis=-1)
+    total = cdf[..., -1:]
+    u = jax.random.uniform(key, weights.shape[:-1] + (1,), weights.dtype)
+    r = u * total
+    # searchsorted per row: count of cdf entries strictly below r.
+    idx = (cdf < r).sum(axis=-1)
+    n = weights.shape[-1]
+    return jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+
+
+def iroulette(key: Array, weights: Array) -> Array:
+    """Paper's independent-roulette: argmax(w * U). Zero weights never win
+    unless all weights are zero (then argmax returns 0 deterministically)."""
+    u = jax.random.uniform(
+        key, weights.shape, weights.dtype, minval=1e-6, maxval=1.0
+    )
+    return jnp.argmax(weights * u, axis=-1).astype(jnp.int32)
+
+
+def gumbel(key: Array, weights: Array) -> Array:
+    """Exact categorical via Gumbel-max on log-weights; zeros masked to -inf."""
+    logw = jnp.where(weights > 0, jnp.log(jnp.maximum(weights, 1e-38)), _NEG_INF)
+    g = jax.random.gumbel(key, weights.shape, weights.dtype)
+    return jnp.argmax(logw + g, axis=-1).astype(jnp.int32)
+
+
+def greedy(key: Array, weights: Array) -> Array:
+    """Deterministic argmax (ACS exploitation step / NN-list fallback)."""
+    del key
+    return jnp.argmax(weights, axis=-1).astype(jnp.int32)
+
+
+SELECTORS = {
+    "roulette": roulette,
+    "iroulette": iroulette,
+    "gumbel": gumbel,
+    "greedy": greedy,
+}
+
+
+def select(name: str, key: Array, weights: Array) -> Array:
+    return SELECTORS[name](key, weights)

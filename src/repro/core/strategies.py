@@ -1,0 +1,243 @@
+"""Tour-construction strategies (paper §IV.A).
+
+The strategy ladder mirrors Table II of the paper:
+
+1. ``task_baseline``  task parallelism, one logical thread per ant,
+                      heuristic values recomputed at every construction step
+                      (the paper's version 1 — "redundantly calculates
+                      heuristic information").
+2. ``task_choice``    task parallelism + precomputed choice_info
+                      (the paper's version 2, "Choice kernel").
+3. ``nn_list``        nearest-neighbour candidate lists with best-unvisited
+                      fallback (the paper's version 4; versions 5/6 are
+                      GPU-memory-placement variants with no TPU analogue —
+                      see DESIGN.md §2).
+4. ``data_parallel``  the paper's contribution (version 7/8): the whole
+                      colony's step is one (m, n) tensor op — gather choice
+                      rows, mask tabu, multiply by per-city randoms, reduce.
+                      On TPU the city axis lives in VPU lanes; the Pallas
+                      ``tour_select`` kernel (kernels/tour_select.py) is the
+                      tiled in-VMEM version and can be injected via
+                      ``step_impl``.
+
+All variants share one lax.scan skeleton so that solution-quality parity
+(claim C6) is attributable to the selection semantics only.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import sampling
+
+Array = jax.Array
+
+
+class TourState(NamedTuple):
+    cur: Array      # (m,) int32 current city
+    visited: Array  # (m, n) bool tabu list
+
+
+class TourResult(NamedTuple):
+    tours: Array    # (m, n) int32 city permutations
+    lengths: Array  # (m,) float32 closed-tour lengths
+
+
+def place_ants(key: Array, m: int, n: int) -> Array:
+    """Random initial city per ant (paper: 'ants are randomly placed')."""
+    return jax.random.randint(key, (m,), 0, n, dtype=jnp.int32)
+
+
+def _init_state(start: Array, n: int) -> TourState:
+    m = start.shape[0]
+    visited = jnp.zeros((m, n), jnp.bool_).at[jnp.arange(m), start].set(True)
+    return TourState(start, visited)
+
+
+def _finish(start: Array, steps: Array, dist: Array) -> TourResult:
+    """steps (n-1, m) emitted cities -> tours (m, n) + lengths."""
+    tours = jnp.concatenate([start[None, :], steps], axis=0).T  # (m, n)
+    nxt = jnp.roll(tours, -1, axis=-1)
+    lengths = dist[tours, nxt].sum(-1)
+    return TourResult(tours.astype(jnp.int32), lengths)
+
+
+StepImpl = Callable[[Array, Array, TourState, int, dict], Array]
+# (key, choice_info, state, t, extras) -> next city (m,)
+# Steps are MODULE-LEVEL functions keyed by (method, selection) so that
+# repeated construct_tours calls hit the jit cache (a fresh closure per call
+# would retrace every time — observed as ~1.4 s/call of pure compile).
+
+
+def _make_dense_step(selector: str) -> StepImpl:
+    sel = sampling.SELECTORS[selector]
+
+    def step(key, choice_info, st, t, extras):
+        del t, extras
+        w = choice_info[st.cur] * (~st.visited)          # (m, n)
+        return sel(key, w)
+
+    return step
+
+
+def _make_recompute_step(selector: str) -> StepImpl:
+    """Paper's baseline: recompute tau^a * eta^b for the current row each
+    step (tau/eta/alpha/beta arrive as operands via ``extras``)."""
+    sel = sampling.SELECTORS[selector]
+
+    def step(key, choice_info, st, t, extras):
+        del choice_info, t
+        w = (extras["tau"][st.cur] ** extras["alpha"]
+             * extras["eta"][st.cur] ** extras["beta"]) * (~st.visited)
+        return sel(key, w)
+
+    return step
+
+
+def _make_nn_step(selector: str) -> StepImpl:
+    """NN-list construction: sample among unvisited candidates; if the whole
+    candidate set is visited, fall back to the best unvisited city by choice
+    value (paper §II: 'selects the best neighbour according to eq. 1')."""
+    sel = sampling.SELECTORS[selector]
+
+    def step(key, choice_info, st, t, extras):
+        del t
+        nn = extras["nn"]
+        m = st.cur.shape[0]
+        ants = jnp.arange(m)
+        cand = nn[st.cur]                                   # (m, k)
+        cw = choice_info[st.cur[:, None], cand]             # (m, k)
+        cmask = ~st.visited[ants[:, None], cand]
+        wc = cw * cmask
+        have = wc.sum(-1) > 0
+        local = sel(key, wc)                                # (m,) in [0, k)
+        nxt_nn = cand[ants, local]
+        w_full = choice_info[st.cur] * (~st.visited)
+        nxt_fb = jnp.argmax(w_full, axis=-1).astype(jnp.int32)
+        return jnp.where(have, nxt_nn, nxt_fb)
+
+    return step
+
+
+def _make_pallas_step(selector: str) -> StepImpl:
+    def step(key, choice_info, st, t, extras):
+        del t, extras
+        from repro.kernels import ops as kops
+        rows = choice_info[st.cur]
+        u = jax.random.uniform(key, rows.shape, rows.dtype,
+                               minval=1e-6, maxval=1.0)
+        return kops.tour_select(rows, st.visited, u, selector)
+
+    return step
+
+
+_STEPS: dict[tuple[str, str], StepImpl] = {}
+for _sel in sampling.SELECTORS:
+    _STEPS[("data_parallel", _sel)] = _make_dense_step(_sel)
+    _STEPS[("task_choice", _sel)] = _make_dense_step(
+        "roulette" if _sel == "iroulette" else _sel)
+    _STEPS[("task_baseline", _sel)] = _make_recompute_step("roulette")
+    _STEPS[("nn_list", _sel)] = _make_nn_step(_sel)
+    _STEPS[("pallas", _sel)] = _make_pallas_step(_sel)
+
+
+@partial(jax.jit, static_argnames=("n", "method", "selection"))
+def _construct(key: Array, choice_info: Array, dist: Array, start: Array,
+               extras: dict, n: int, method: str,
+               selection: str) -> TourResult:
+    step_impl = _STEPS[(method, selection)]
+    st0 = _init_state(start, n)
+    m = start.shape[0]
+    ants = jnp.arange(m)
+
+    def body(st: TourState, t: Array):
+        k = jax.random.fold_in(key, t)
+        nxt = step_impl(k, choice_info, st, t, extras)
+        visited = st.visited.at[ants, nxt].set(True)
+        return TourState(nxt, visited), nxt
+
+    _, steps = jax.lax.scan(body, st0, jnp.arange(1, n))
+    return _finish(start, steps, dist)
+
+
+def construct_tours(
+    key: Array,
+    dist: Array,
+    choice_info: Array,
+    m: int,
+    method: str = "data_parallel",
+    selection: str = "iroulette",
+    nn: Optional[Array] = None,
+    tau: Optional[Array] = None,
+    eta: Optional[Array] = None,
+    alpha: float = 1.0,
+    beta: float = 2.0,
+    step_impl: Optional[StepImpl] = None,
+) -> TourResult:
+    """Build m complete tours under the given strategy.
+
+    choice_info: (n, n) precomputed tau^alpha * eta^beta (ignored by
+    ``task_baseline``, which recomputes it row-wise each step).
+    ``step_impl``: pass the string "pallas" via method, or a custom StepImpl
+    (custom callables bypass the jit cache — fine inside an outer jit like
+    aco.colony_step, slow if called repeatedly in eager mode).
+    """
+    n = dist.shape[0]
+    kp, kc = jax.random.split(key)
+    start = place_ants(kp, m, n)
+    zero = jnp.zeros((1, 1), jnp.float32)
+    extras = {
+        "tau": tau if tau is not None else zero,
+        "eta": eta if eta is not None else zero,
+        "alpha": jnp.float32(alpha),
+        "beta": jnp.float32(beta),
+        "nn": nn if nn is not None else jnp.zeros((1, 1), jnp.int32),
+    }
+    if step_impl is not None:
+        # custom injection path (un-cached trace)
+        def _custom(key_, ci_, dist_, start_, extras_):
+            st0 = _init_state(start_, n)
+            ants = jnp.arange(start_.shape[0])
+
+            def body(st, t):
+                k = jax.random.fold_in(key_, t)
+                nxt = step_impl(k, ci_, st, t)
+                return TourState(nxt, st.visited.at[ants, nxt].set(True)), nxt
+
+            _, steps = jax.lax.scan(body, st0, jnp.arange(1, n))
+            return _finish(start_, steps, dist_)
+
+        return _custom(kc, choice_info, dist, start, extras)
+    if method not in ("data_parallel", "task_choice", "task_baseline",
+                      "nn_list", "pallas"):
+        raise ValueError(f"unknown construction method {method}")
+    if method == "task_baseline":
+        assert tau is not None and eta is not None
+    if method == "nn_list":
+        assert nn is not None
+    return _construct(kc, choice_info, dist, start, extras, n, method,
+                      selection)
+
+
+def choice_matrix(tau: Array, eta: Array, alpha: float, beta: float) -> Array:
+    """The paper's Choice kernel: precompute tau^a * eta^b once per iteration.
+
+    Integer exponents take the cheap path (XLA folds x**1, x**2 to mults);
+    the Pallas version lives in kernels/choice_info.py.
+    """
+    def ipow(x: Array, p: float) -> Array:
+        if p == 1.0:
+            return x
+        if p == 2.0:
+            return x * x
+        if p == int(p) and 0 < int(p) <= 4:
+            y = x
+            for _ in range(int(p) - 1):
+                y = y * x
+            return y
+        return x ** p
+
+    return ipow(tau, alpha) * ipow(eta, beta)

@@ -1,0 +1,173 @@
+"""TSP problem substrate: instances, distance matrices, nearest-neighbour lists.
+
+TSPLIB conventions are followed for distance rounding (EUC_2D uses
+nint(sqrt), ATT uses the pseudo-Euclidean ceiling rule) so tour lengths are
+comparable with published optima when real instances are loaded from files.
+Synthetic generators (uniform-random and circle, the latter with a known
+optimal tour) are provided for offline benchmarking at the paper's problem
+sizes (48 .. 2392 cities).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TSPInstance:
+    """A (symmetric) TSP instance.
+
+    coords: (n, 2) float64 city coordinates, or None if dist_matrix given.
+    edge_weight_type: TSPLIB distance function name.
+    """
+
+    name: str
+    coords: Optional[np.ndarray] = None
+    edge_weight_type: str = "EUC_2D"
+    dist_matrix: Optional[np.ndarray] = None
+    known_optimum: Optional[float] = None
+
+    @property
+    def n(self) -> int:
+        if self.coords is not None:
+            return int(self.coords.shape[0])
+        assert self.dist_matrix is not None
+        return int(self.dist_matrix.shape[0])
+
+    def distances(self) -> np.ndarray:
+        """Dense (n, n) float32 distance matrix with TSPLIB rounding."""
+        if self.dist_matrix is not None:
+            return np.asarray(self.dist_matrix, dtype=np.float32)
+        assert self.coords is not None
+        xy = self.coords.astype(np.float64)
+        diff = xy[:, None, :] - xy[None, :, :]
+        if self.edge_weight_type == "EUC_2D":
+            d = np.rint(np.sqrt((diff**2).sum(-1)))
+        elif self.edge_weight_type == "CEIL_2D":
+            d = np.ceil(np.sqrt((diff**2).sum(-1)))
+        elif self.edge_weight_type == "ATT":
+            rij = np.sqrt((diff**2).sum(-1) / 10.0)
+            tij = np.rint(rij)
+            d = np.where(tij < rij, tij + 1.0, tij)
+        elif self.edge_weight_type == "RAW":  # no rounding (synthetic)
+            d = np.sqrt((diff**2).sum(-1))
+        else:
+            raise ValueError(f"unsupported edge_weight_type {self.edge_weight_type}")
+        np.fill_diagonal(d, 0.0)
+        return d.astype(np.float32)
+
+
+def random_instance(n: int, seed: int = 0, box: float = 1000.0) -> TSPInstance:
+    """Uniform-random Euclidean instance (synthetic stand-in for TSPLIB)."""
+    rng = np.random.RandomState(seed)
+    coords = rng.uniform(0.0, box, size=(n, 2))
+    return TSPInstance(name=f"rand{n}", coords=coords, edge_weight_type="RAW")
+
+
+def circle_instance(n: int, radius: float = 1000.0, seed: int = 0) -> TSPInstance:
+    """Cities on a circle: the optimal tour is the angular order.
+
+    known_optimum = perimeter of the polygon through sorted angles. Used for
+    honest solution-quality validation without shipping TSPLIB data files.
+    """
+    rng = np.random.RandomState(seed)
+    theta = np.sort(rng.uniform(0.0, 2.0 * math.pi, size=n))
+    coords = radius * np.stack([np.cos(theta), np.sin(theta)], axis=-1)
+    closed = np.concatenate([coords, coords[:1]], axis=0)
+    opt = float(np.sqrt(((closed[1:] - closed[:-1]) ** 2).sum(-1)).sum())
+    return TSPInstance(
+        name=f"circle{n}", coords=coords, edge_weight_type="RAW", known_optimum=opt
+    )
+
+
+def grid_instance(side: int) -> TSPInstance:
+    """side x side unit grid; optimum = side*side for even side (boustrophedon)."""
+    xs, ys = np.meshgrid(np.arange(side), np.arange(side))
+    coords = np.stack([xs.ravel(), ys.ravel()], axis=-1).astype(np.float64)
+    opt = float(side * side) if side % 2 == 0 else None
+    return TSPInstance(
+        name=f"grid{side}x{side}", coords=coords, edge_weight_type="RAW",
+        known_optimum=opt,
+    )
+
+
+def parse_tsplib(text: str, name: str = "tsplib") -> TSPInstance:
+    """Minimal TSPLIB .tsp parser (NODE_COORD_SECTION, EUC_2D/ATT/CEIL_2D)."""
+    ewt = "EUC_2D"
+    m = re.search(r"EDGE_WEIGHT_TYPE\s*:\s*(\w+)", text)
+    if m:
+        ewt = m.group(1)
+    nm = re.search(r"NAME\s*:\s*(\S+)", text)
+    if nm:
+        name = nm.group(1)
+    lines = text.splitlines()
+    coords = []
+    in_sec = False
+    for ln in lines:
+        s = ln.strip()
+        if s.startswith("NODE_COORD_SECTION"):
+            in_sec = True
+            continue
+        if in_sec:
+            if s == "EOF" or not s:
+                break
+            parts = s.split()
+            coords.append((float(parts[1]), float(parts[2])))
+    if not coords:
+        raise ValueError("no NODE_COORD_SECTION found")
+    return TSPInstance(name=name, coords=np.asarray(coords), edge_weight_type=ewt)
+
+
+def nn_lists(dist: Array, k: int) -> Array:
+    """(n, k) int32 nearest-neighbour lists, self excluded (paper §II, nn=15..40)."""
+    n = dist.shape[0]
+    d = dist + jnp.eye(n, dtype=dist.dtype) * jnp.finfo(dist.dtype).max
+    _, idx = jax.lax.top_k(-d, k)
+    return idx.astype(jnp.int32)
+
+
+def tour_length(dist: Array, tour: Array) -> Array:
+    """Closed-tour length; tour (..., n) int32 city permutation."""
+    nxt = jnp.roll(tour, -1, axis=-1)
+    return jnp.take_along_axis(
+        dist[tour], nxt[..., None], axis=-1
+    )[..., 0].sum(-1)
+
+
+def heuristic_matrix(dist: Array) -> Array:
+    """eta = 1/d with safe diagonal (paper eq. 1)."""
+    eps = jnp.asarray(1e-10, dist.dtype)
+    return 1.0 / jnp.maximum(dist, eps)
+
+
+def is_valid_tour(tour: np.ndarray) -> bool:
+    tour = np.asarray(tour)
+    n = tour.shape[-1]
+    return bool((np.sort(tour, axis=-1) == np.arange(n)).all())
+
+
+def nearest_neighbour_tour(dist: np.ndarray, start: int = 0) -> tuple[np.ndarray, float]:
+    """Greedy NN heuristic tour — used for tau0 initialisation (Dorigo &
+    Stützle: tau0 = m / C_nn) and as a quality yardstick."""
+    dist = np.asarray(dist)
+    n = dist.shape[0]
+    visited = np.zeros(n, dtype=bool)
+    tour = np.empty(n, dtype=np.int32)
+    cur = start
+    tour[0] = cur
+    visited[cur] = True
+    for i in range(1, n):
+        d = np.where(visited, np.inf, dist[cur])
+        cur = int(np.argmin(d))
+        tour[i] = cur
+        visited[cur] = True
+    length = float(dist[tour, np.roll(tour, -1)].sum())
+    return tour, length

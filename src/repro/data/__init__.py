@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLMData, tsp_batch_stream
+
+__all__ = ["DataConfig", "SyntheticLMData", "tsp_batch_stream"]

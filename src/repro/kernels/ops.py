@@ -1,0 +1,64 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``INTERPRET`` is True on CPU (kernel bodies execute in Python for
+validation) and flips to False on a real TPU backend automatically.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import choice_info as _ci
+from . import pheromone_update as _pu
+from . import tour_select as _ts
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+INTERPRET = _interpret_default()
+
+
+def choice_info(tau: jax.Array, eta: jax.Array, alpha: float = 1.0,
+                beta: float = 2.0) -> jax.Array:
+    return _ci.choice_info(tau, eta, alpha, beta, interpret=INTERPRET)
+
+
+def tour_select(rows: jax.Array, visited: jax.Array, rand: jax.Array,
+                mode: str = "iroulette") -> jax.Array:
+    return _ts.tour_select(rows, visited, rand, mode, interpret=INTERPRET)
+
+
+def tour_select_step(selection: str = "iroulette"):
+    """StepImpl closure for core.strategies.construct_tours injection."""
+
+    def step(key, choice_info_, st, t):
+        del t
+        rows = choice_info_[st.cur]
+        u = jax.random.uniform(key, rows.shape, rows.dtype,
+                               minval=1e-6, maxval=1.0)
+        return tour_select(rows, st.visited, u, selection)
+
+    return step
+
+
+def pheromone_update(tau: jax.Array, tours: jax.Array, w: jax.Array,
+                     rho: float) -> jax.Array:
+    """Symmetric fused update from (m, n) tours + (m,) weights."""
+    frm = tours.ravel()
+    to = jnp.roll(tours, -1, axis=-1).ravel()
+    ns = tours.shape[-1]
+    wrep = jnp.repeat(w, ns)
+    # both directions for the symmetric TSP
+    f2 = jnp.concatenate([frm, to])
+    t2 = jnp.concatenate([to, frm])
+    w2 = jnp.concatenate([wrep, wrep])
+    return _pu.pheromone_update(tau, f2, t2, w2, rho, interpret=INTERPRET)
+
+
+def pheromone_update_edges(tau: jax.Array, frm: jax.Array, to: jax.Array,
+                           w: jax.Array, rho: float) -> jax.Array:
+    return _pu.pheromone_update(tau, frm, to, w, rho, interpret=INTERPRET)

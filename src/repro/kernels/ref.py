@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-comparable in f32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def choice_info(tau: jax.Array, eta: jax.Array, alpha: float,
+                beta: float) -> jax.Array:
+    def ipow(x, p):
+        if p == 1.0:
+            return x
+        if float(p).is_integer() and 0 < int(p) <= 4:
+            y = x
+            for _ in range(int(p) - 1):
+                y = y * x
+            return y
+        return x ** p
+    return ipow(tau, alpha) * ipow(eta, beta)
+
+
+def tour_select(rows: jax.Array, visited: jax.Array, rand: jax.Array,
+                mode: str = "iroulette") -> jax.Array:
+    mask = (visited == 0).astype(rows.dtype)
+    if mode == "iroulette":
+        v = rows * rand * mask
+    elif mode == "gumbel":
+        g = -jnp.log(-jnp.log(jnp.clip(rand, 1e-12, 1.0 - 1e-7)))
+        valid = (rows > 0) & (mask > 0)
+        v = jnp.where(valid, jnp.log(jnp.maximum(rows, 1e-38)) + g, _NEG_INF)
+    elif mode == "greedy":
+        v = jnp.where(mask > 0, rows, _NEG_INF)
+    else:
+        raise ValueError(mode)
+    return jnp.argmax(v, axis=-1).astype(jnp.int32)
+
+
+def pheromone_update(tau: jax.Array, frm: jax.Array, to: jax.Array,
+                     w: jax.Array, rho: float) -> jax.Array:
+    n = tau.shape[0]
+    valid = (frm >= 0) & (to >= 0)
+    wv = jnp.where(valid, w, 0.0)
+    fi = jnp.where(valid, frm, 0)
+    ti = jnp.where(valid, to, 0)
+    d = jnp.zeros((n, n), jnp.float32).at[fi, ti].add(wv)
+    return (1.0 - rho) * tau + d

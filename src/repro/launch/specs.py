@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+The assigned LM shape grid (task spec):
+    train_4k     seq 4096,    global_batch 256   -> train_step
+    prefill_32k  seq 32768,   global_batch 32    -> prefill_step (forward)
+    decode_32k   seq 32768,   global_batch 128   -> serve_step (1 new token,
+                                                   KV cache holding seq_len)
+    long_500k    seq 524288,  global_batch 1     -> serve_step, sub-quadratic
+                                                   archs only
+
+Modality frontends are stubs: whisper cells add precomputed frame
+embeddings (B, 1500, d_model); qwen2-vl cells use token inputs with M-RoPE
+positions generated internally (the stub patchifier's position ids).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+ENC_FRAMES = 1500          # whisper stub frontend length
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — skips recorded in EXPERIMENTS.md."""
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("pure full-attention arch: O(S^2) attention at 524288 "
+                       "is out of scope per task rules (sub-quadratic only)")
+    return True, ""
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Abstract inputs for the cell's step function (no allocation)."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    out: dict[str, Any] = {}
+    if cell.kind in ("train", "prefill"):
+        out["tokens"] = sds((b, s), jnp.int32)
+        if cell.kind == "train":
+            out["labels"] = sds((b, s), jnp.int32)
+        if cfg.enc_dec:
+            out["enc_frames"] = sds((b, ENC_FRAMES, cfg.d_model), jnp.bfloat16)
+    else:                                   # decode: 1 new token + caches
+        out["token"] = sds((b, 1), jnp.int32)
+        out["caches"] = jax.eval_shape(
+            lambda: model.init_cache(cfg, b, s,
+                                     enc_len=ENC_FRAMES if cfg.enc_dec else 0))
+    return out
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(params: PyTree) -> PyTree:
+    from repro.optim import adamw
+    return jax.eval_shape(lambda p: adamw.adamw_init(p), params)

@@ -1,0 +1,70 @@
+"""Jit-able train / prefill / serve step builders shared by the trainer,
+server, dry-run and benchmarks."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    remat: bool = True, compress: bool = False):
+    """(params, opt_state, tokens, labels[, enc_frames]) -> updated + metrics.
+
+    compress=True routes gradients through the int8 quantise/dequantise pair
+    *before* the optimizer — under SPMD the quantised tensor is what crosses
+    the DP axis (the all-reduce runs on the int8 payload's dequantised form;
+    XLA schedules the cast next to the collective)."""
+
+    def train_step(params: PyTree, opt_state: adamw.AdamWState,
+                   tokens: jax.Array, labels: jax.Array,
+                   enc_frames: Optional[jax.Array] = None):
+        def lf(p):
+            return model.loss_fn(p, tokens, labels, cfg,
+                                 enc_frames=enc_frames, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if compress:
+            from repro.optim import compression
+            q, scales, _ = compression.compress_grads(grads, None)
+            grads = compression.decompress_grads(q, scales)
+        new_params, new_opt, om = adamw.adamw_update(
+            opt_cfg, grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Full-sequence forward (the prefill_32k cells lower this)."""
+
+    def prefill_step(params: PyTree, tokens: jax.Array,
+                     enc_frames: Optional[jax.Array] = None):
+        logits, _ = model.forward(params, tokens, cfg, enc_frames=enc_frames,
+                                  remat=False)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, sample: str = "greedy"):
+    """One decode step with a KV cache: (params, token, caches) ->
+    (next_token, caches, logits)."""
+
+    def serve_step(params: PyTree, token: jax.Array, caches: PyTree):
+        logits, caches = model.decode_step(params, token, caches, cfg)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], caches
+
+    return serve_step

@@ -1,0 +1,126 @@
+"""End-to-end LM trainer: config -> mesh -> sharded train loop with
+checkpoint/restart, resumable data pipeline, and optional gradient
+compression.
+
+CPU-scale usage (examples/train_lm.py drives this):
+    PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Cluster usage is identical with --mesh-model/--mesh-pods on real devices;
+restarts pick up the newest checkpoint (params, optimizer, data cursor).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as ck
+from repro import configs
+from repro.data import DataConfig, SyntheticLMData
+from repro.launch import steps as st
+from repro.launch.mesh import make_mesh_for
+from repro.models import model, sharding as sh
+from repro.optim import adamw
+
+
+def train(arch: str, steps: int, batch: int, seq: int, reduced: bool = True,
+          ckpt_dir: str | None = None, ckpt_every: int = 20,
+          model_parallel: int = 1, compress: bool = False,
+          seed: int = 0, log_every: int = 10, lr: float = 3e-4) -> dict:
+    cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
+    mesh = make_mesh_for(model_parallel=model_parallel)
+    opt_cfg = adamw.AdamWConfig(lr=lr, total_steps=max(steps, 2),
+                                warmup_steps=max(steps // 20, 1))
+
+    params = model.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw.adamw_init(params)
+    pspecs = sh.param_specs(params, cfg, mesh)
+    psh = sh.to_shardings(pspecs, mesh)
+    rep = NamedSharding(mesh, P())
+    osh = adamw.AdamWState(mu=psh, nu=psh, step=rep)
+    params = jax.device_put(params, psh)
+    opt_state = jax.device_put(opt_state, osh)
+
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch,
+                      seed=seed)
+    data = SyntheticLMData(dcfg)
+    start_step = 0
+
+    mgr = None
+    if ckpt_dir:
+        mgr = ck.CheckpointManager(ckpt_dir, keep=3)
+        latest = mgr.latest_step()
+        if latest is not None:
+            tmpl = {"params": params, "opt": opt_state,
+                    "data": {"step": 0, "seed": seed}}
+            shd = {"params": psh, "opt": osh,
+                   "data": {"step": rep, "seed": rep}}
+            restored, start_step = mgr.restore(tmpl, shardings=shd)
+            params, opt_state = restored["params"], restored["opt"]
+            data = SyntheticLMData.restore(dcfg, jax.tree.map(
+                int, restored["data"]))
+            print(f"[train] resumed from step {start_step}", flush=True)
+
+    dspec = sh.data_specs(cfg, mesh, batch)
+    dsh = NamedSharding(mesh, dspec)
+    step_fn = jax.jit(
+        st.make_train_step(cfg, opt_cfg, remat=True, compress=compress),
+        in_shardings=(psh, osh, dsh, dsh),
+        out_shardings=(psh, osh, rep),
+        donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    for i in range(start_step, steps):
+        tokens, labels = next(data)
+        params, opt_state, metrics = step_fn(
+            params, opt_state,
+            jax.device_put(jnp.asarray(tokens), dsh),
+            jax.device_put(jnp.asarray(labels), dsh))
+        if (i + 1) % log_every == 0 or i == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            print(f"[train] step {i+1}/{steps} loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(i+1-start_step):.2f}s/step)",
+                  flush=True)
+        if mgr and (i + 1) % ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt_state,
+                             "data": data.state()})
+    if mgr:
+        mgr.save(steps, {"params": params, "opt": opt_state,
+                         "data": data.state()})
+        mgr.wait()
+    return {"final_loss": losses[-1] if losses else None, "losses": losses}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = train(args.arch, args.steps, args.batch, args.seq, args.reduced,
+                args.ckpt_dir, args.ckpt_every, args.model_parallel,
+                args.compress, args.seed)
+    print(json.dumps({"final_loss": out["final_loss"]}))
+
+
+if __name__ == "__main__":
+    main()

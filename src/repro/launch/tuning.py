@@ -1,0 +1,43 @@
+"""Beyond-baseline performance overrides per (arch, shape) cell.
+
+Each entry is a dataclasses.replace() kwargs dict applied to the published
+ModelConfig before lowering. These change LAYOUT/SCHEDULE only, never the
+computed function (e.g. attn_pad_heads hard-masks padded heads so the model
+is bit-identical — see tests/test_models.py::test_head_padding_exact).
+
+The dry-run writes tuned cells to experiments/dryrun_tuned/ so baseline and
+optimized rooflines are recorded separately (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+# (arch, shape) -> ModelConfig replace() kwargs (+ "mesh_strategy").
+# "*" entries apply first; shape-specific entries override them.
+TUNED: dict[tuple[str, str], dict] = {
+    # 24 heads % 16-way TP != 0 made GSPMD shard head_dim, turning QK^T into
+    # a partial-sum with a (B,H,S,S) logits all-reduce (2.47 TB/step).
+    # Padding 24->32 heads (zero-masked, bit-exact) restores head sharding.
+    ("minitron_4b", "*"): {"attn_pad_heads": 32},
+    # Same pathology: 12 heads -> pad to 16.
+    ("qwen2_vl_2b", "*"): {"attn_pad_heads": 16},
+    # 4B params x 1M-token batch is the FSDP regime: batch over BOTH mesh
+    # axes, params fully sharded, no TP -> per-layer param all-gathers
+    # (~0.5 GB) replace residual-stream all-reduces (~3.2 GB/layer) and no
+    # head padding is needed at all.
+    ("minitron_4b", "train_4k"): {"attn_pad_heads": 0,
+                                  "mesh_strategy": "fsdp"},
+    ("qwen2_vl_2b", "train_4k"): {"attn_pad_heads": 0,
+                                  "mesh_strategy": "fsdp"},
+}
+
+
+def overrides_for(arch: str, shape: str) -> Optional[dict]:
+    out: dict = {}
+    for (a, s), kw in TUNED.items():
+        if a == arch and s == "*":
+            out.update(kw)
+    for (a, s), kw in TUNED.items():
+        if a == arch and s == shape:
+            out.update(kw)
+    return out or None

@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from . import model, layers, ssm, moe, sharding
+
+__all__ = ["ModelConfig", "model", "layers", "ssm", "moe", "sharding"]

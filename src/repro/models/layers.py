@@ -1,0 +1,349 @@
+"""Transformer building blocks: norms, rotary embeddings, attention
+(GQA / sliding-window / MLA / cross), dense MLPs.
+
+All functions are pure: ``params`` pytrees in, arrays out. Initialisation
+mirrors common practice (truncated-normal 0.02, zero-init output projs are
+skipped for simplicity). Softmax and norm statistics run in float32
+regardless of compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+INIT_SCALE = 0.02
+
+
+def _norm_init(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * INIT_SCALE
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, d: int) -> PyTree:
+    if cfg.norm == "nonparam_ln":          # olmo: no scale, no bias
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), cfg.pdtype),
+                "bias": jnp.zeros((d,), cfg.pdtype)}
+    return {"scale": jnp.ones((d,), cfg.pdtype)}     # rmsnorm
+
+
+def apply_norm(p: PyTree, x: Array, cfg: ModelConfig) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope
+def rope_freqs(dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (B, S, H, Dh), positions (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: tuple[int, int, int]) -> Array:
+    """Qwen2-VL multimodal RoPE: positions3 (3, B, S) for (t, h, w);
+    the dh/2 frequency slots are split into t/h/w sections."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(dh, theta)                        # (half,)
+    # choose which position stream drives each frequency slot
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)        # (half,)
+    pos = positions3.astype(jnp.float32)                 # (3, B, S)
+    ang = jnp.take(pos, sec_id, axis=0)                  # (half, B, S) stream per slot
+    ang = jnp.moveaxis(ang, 0, -1) * freqs               # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def positions_like(tokens: Array, offset: Array | int = 0) -> Array:
+    b, s = tokens.shape[:2]
+    return jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+
+
+# ------------------------------------------------------------- attention
+def init_attention(key: Array, cfg: ModelConfig) -> PyTree:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    ks = jax.random.split(key, 8)
+    if cfg.attn_kind == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wkv_a": _norm_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), cfg.pdtype),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), cfg.pdtype),
+            "wkv_b": _norm_init(ks[3], (cfg.kv_lora_rank,
+                                        h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                                cfg.pdtype),
+            "wo": _norm_init(ks[4], (h * cfg.v_head_dim, d), cfg.pdtype),
+        }
+        if cfg.q_lora_rank:
+            p["wq_a"] = _norm_init(ks[0], (d, cfg.q_lora_rank), cfg.pdtype)
+            p["q_norm"] = jnp.ones((cfg.q_lora_rank,), cfg.pdtype)
+            p["wq_b"] = _norm_init(ks[1], (cfg.q_lora_rank, h * qk), cfg.pdtype)
+        else:
+            p["wq"] = _norm_init(ks[0], (d, h * qk), cfg.pdtype)
+        return p
+    hp = cfg.attn_pad_heads or h
+    assert hp >= h
+    wq = _norm_init(ks[0], (d, hp, dh), cfg.pdtype)
+    wo = _norm_init(ks[3], (hp, dh, d), cfg.pdtype)
+    if hp > h:          # padded head slices start (and stay) exactly zero
+        wq = wq.at[:, h:, :].set(0.0)
+        wo = wo.at[h:, :, :].set(0.0)
+    return {
+        "wq": wq,
+        "wk": _norm_init(ks[1], (d, kv, dh), cfg.pdtype),
+        "wv": _norm_init(ks[2], (d, kv, dh), cfg.pdtype),
+        "wo": wo,
+    }
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array],
+          softcap: float = 0.0) -> Array:
+    """q (B,S,H,Dh), k/v (B,T,H,Dh) already head-expanded. f32 softmax."""
+    dh = q.shape[-1]
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(dh))
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _expand_kv(k: Array, n_heads: int, cfg: Optional[ModelConfig] = None
+               ) -> Array:
+    """(B,T,KV,Dh) -> (B,T,Hp,Dh) by GQA group mapping.
+
+    With head padding, the logical group mapping (head i -> kv i // (H/KV))
+    must be preserved for the real heads; padded heads reuse group 0 (their
+    output is hard-masked anyway)."""
+    kvh = k.shape[2]
+    hp = n_heads
+    h_logical = cfg.n_heads if cfg is not None else n_heads
+    if kvh == hp:
+        return k
+    if hp == h_logical:
+        return jnp.repeat(k, hp // kvh, axis=2)
+    idx = jnp.concatenate([
+        jnp.arange(h_logical) // max(h_logical // kvh, 1),
+        jnp.zeros((hp - h_logical,), jnp.int32)]).astype(jnp.int32)
+    return k[:, :, idx, :]
+
+
+def _head_mask(cfg: ModelConfig, hp: int, dtype) -> Optional[Array]:
+    """(Hp,) 1.0 for logical heads, 0.0 for padding (None when unpadded)."""
+    if hp == cfg.n_heads:
+        return None
+    return (jnp.arange(hp) < cfg.n_heads).astype(dtype)
+
+
+def causal_mask(s: int, t: int, offset: int = 0, window: int = 0) -> Array:
+    """(1,1,S,T) boolean; query i attends key j iff j <= i+offset and within
+    the sliding window when window > 0."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m[None, None]
+
+
+def attention(p: PyTree, x: Array, cfg: ModelConfig, positions: Array,
+              cache: Optional[PyTree] = None,
+              kv_src: Optional[Array] = None,
+              is_cross: bool = False) -> tuple[Array, Optional[PyTree]]:
+    """Self- or cross-attention with optional decode cache.
+
+    cache (self-attn): {"k": (B,T,KV,Dh), "v": ..., "len": ()} — ring buffer
+    when cfg.window > 0 (SWA decode state is O(window)).
+    cross-attn: cache = {"k","v"} precomputed from encoder output.
+    """
+    b, s, d = x.shape
+    kvh, dh = cfg.n_kv, cfg.d_head
+    hp = p["wq"].shape[1]                       # physical (maybe padded) heads
+    hmask = _head_mask(cfg, hp, cfg.cdtype)
+    ct = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(ct), p["wq"].astype(ct))
+
+    def project_out(out):
+        if hmask is not None:                   # zero padded heads: exact
+            out = out * hmask[None, None, :, None]
+        return jnp.einsum("bshd,hdk->bsk", out, p["wo"].astype(ct))
+
+    if kv_src is not None or is_cross:          # cross attention
+        if cache is not None and "k" in cache:
+            k, v = cache["k"], cache["v"]
+        else:
+            k = jnp.einsum("btd,dhk->bthk", kv_src.astype(ct), p["wk"].astype(ct))
+            v = jnp.einsum("btd,dhk->bthk", kv_src.astype(ct), p["wv"].astype(ct))
+            cache = {"k": k, "v": v}
+        out = _sdpa(q, _expand_kv(k, hp, cfg), _expand_kv(v, hp, cfg), None,
+                    cfg.logit_softcap)
+        return project_out(out), cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x.astype(ct), p["wk"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", x.astype(ct), p["wv"].astype(ct))
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+
+    if cache is None:                           # full-sequence (train/prefill)
+        mask = (causal_mask(s, s, 0, cfg.window) if cfg.causal else None)
+        out = _sdpa(q, _expand_kv(k, hp, cfg), _expand_kv(v, hp, cfg), mask,
+                    cfg.logit_softcap)
+        new_cache = None
+    else:                                       # single-token decode
+        t = cache["k"].shape[1]
+        if cfg.window > 0 and t == cfg.window:  # O(window) ring buffer
+            ck = jnp.roll(cache["k"], -1, axis=1).at[:, -1].set(k[:, 0])
+            cv = jnp.roll(cache["v"], -1, axis=1).at[:, -1].set(v[:, 0])
+            # newest entry lives at slot t-1; valid slots are the last len+1
+            mask = jnp.arange(t)[None, None, None, :] >= (
+                t - jnp.minimum(cache["len"] + 1, t))
+        else:
+            idx = cache["len"]
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+            t = ck.shape[1]
+            kj = jnp.arange(t)[None, None, None, :]
+            mask = kj <= idx
+            if cfg.window > 0:
+                mask &= kj > idx - cfg.window
+        out = _sdpa(q, _expand_kv(ck, hp, cfg), _expand_kv(cv, hp, cfg), mask,
+                    cfg.logit_softcap)
+        new_cache = {"k": ck, "v": cv, "len": cache["len"] + 1}
+    return project_out(out), new_cache
+
+
+def mla_attention(p: PyTree, x: Array, cfg: ModelConfig, positions: Array,
+                  cache: Optional[PyTree] = None
+                  ) -> tuple[Array, Optional[PyTree]]:
+    """DeepSeek-V3 Multi-head Latent Attention.
+
+    Cache stores only the compressed latent (B, T, kv_lora_rank) plus the
+    shared rope key (B, T, qk_rope_dim): 576 values/token vs 2*H*Dh = 32768
+    for MHA at dsv3 scale — the 57x KV-cache compression that makes 32k-decode
+    shardable.
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    ct = cfg.cdtype
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    xc = x.astype(ct)
+
+    if cfg.q_lora_rank:
+        ql = xc @ p["wq_a"].astype(ct)
+        ql = _rms(ql, p["q_norm"])
+        q = (ql @ p["wq_b"].astype(ct)).reshape(b, s, h, nope + rdim)
+    else:
+        q = (xc @ p["wq"].astype(ct)).reshape(b, s, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = xc @ p["wkv_a"].astype(ct)                  # (B,S,rank+rdim)
+    ckv, k_rope = kv_a[..., : cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    ckv = _rms(ckv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    if cache is not None:
+        idx = cache["len"]
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, 1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, idx, 1)
+        new_cache = {"ckv": ckv, "k_rope": k_rope, "len": cache["len"] + 1}
+        t = ckv.shape[1]
+        mask = jnp.arange(t)[None, None, None, :] <= idx
+    else:
+        new_cache = None
+        t = s
+        mask = causal_mask(s, s) if cfg.causal else None
+
+    # decompress keys/values from the latent (weight-absorbed form would fold
+    # wkv_b into q/o; kept explicit for clarity — same FLOPs either way at
+    # prefill, see EXPERIMENTS.md §Perf for the decode absorption variant).
+    kvb = (ckv @ p["wkv_b"].astype(ct)).reshape(b, t, h, nope + vdim)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, t, h, rdim))], -1)
+    logits = jnp.einsum("bshd,bthd->bhst", qf, kf).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(nope + rdim))
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, -1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, s, h * vdim)
+    return out @ p["wo"].astype(ct), new_cache
+
+
+def _rms(x: Array, scale: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLPs
+def init_mlp(key: Array, cfg: ModelConfig, d_ff: int) -> PyTree:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "swiglu":
+        return {"wi": _norm_init(ks[0], (d, d_ff), cfg.pdtype),
+                "wg": _norm_init(ks[1], (d, d_ff), cfg.pdtype),
+                "wo": _norm_init(ks[2], (d_ff, d), cfg.pdtype)}
+    return {"wi": _norm_init(ks[0], (d, d_ff), cfg.pdtype),
+            "wo": _norm_init(ks[2], (d_ff, d), cfg.pdtype)}
+
+
+def _act(x: Array, act: str) -> Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "relu2":          # nemotron/minitron squared relu
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(act)
+
+
+def mlp(p: PyTree, x: Array, cfg: ModelConfig) -> Array:
+    ct = cfg.cdtype
+    xc = x.astype(ct)
+    if cfg.mlp_kind == "swiglu":
+        hdn = _act(xc @ p["wg"].astype(ct), cfg.act) * (xc @ p["wi"].astype(ct))
+    else:
+        hdn = _act(xc @ p["wi"].astype(ct), cfg.act)
+    return hdn @ p["wo"].astype(ct)

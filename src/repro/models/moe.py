@@ -1,0 +1,174 @@
+"""Mixture-of-Experts layer with capacity-based sort dispatch (MaxText-style).
+
+Dispatch is the production formulation: flatten tokens, top-k route, sort
+(expert_id, token) pairs, gather into an (E, C, d) expert batch, run all
+experts as one batched einsum, scatter-combine weighted outputs. The (E, C,
+d) batch is the tensor whose leading axis shards over the ``model`` mesh axis
+for expert parallelism (sharding.py); tokens crossing experts become XLA
+all-to-alls on that axis.
+
+Shared experts (deepseek-v3) run densely on every token. Router uses
+float32 logits, top-k renormalisation, and an optional load-balancing
+auxiliary loss (returned, not applied).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _act, _norm_init
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_moe(key: Array, cfg: ModelConfig) -> PyTree:
+    d, ff = cfg.d_model, cfg.ff_expert
+    e = cfg.n_experts
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": _norm_init(ks[0], (d, e), jnp.float32),
+        "wi": _norm_init(ks[1], (e, d, ff), cfg.pdtype),
+        "wo": _norm_init(ks[3], (e, ff, d), cfg.pdtype),
+    }
+    if cfg.mlp_kind == "swiglu":
+        p["wg"] = _norm_init(ks[2], (e, d, ff), cfg.pdtype)
+    if cfg.n_shared_experts:
+        sff = cfg.ff_expert * cfg.n_shared_experts
+        p["shared_wi"] = _norm_init(ks[4], (d, sff), cfg.pdtype)
+        if cfg.mlp_kind == "swiglu":
+            p["shared_wg"] = _norm_init(ks[5], (d, sff), cfg.pdtype)
+        p["shared_wo"] = _norm_init(ks[6], (sff, d), cfg.pdtype)
+    return p
+
+
+def _expert_ffn(p: PyTree, x: Array, cfg: ModelConfig) -> Array:
+    """x (E, C, d) -> (E, C, d), batched over experts."""
+    ct = cfg.cdtype
+    if cfg.mlp_kind == "swiglu":
+        h = _act(jnp.einsum("ecd,edf->ecf", x, p["wg"].astype(ct)), cfg.act) \
+            * jnp.einsum("ecd,edf->ecf", x, p["wi"].astype(ct))
+    else:
+        h = _act(jnp.einsum("ecd,edf->ecf", x, p["wi"].astype(ct)), cfg.act)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(ct))
+
+
+def moe_layer(p: PyTree, x: Array, cfg: ModelConfig,
+              rng: Optional[Array] = None) -> tuple[Array, Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss ()).
+
+    Dispatch is grouped PER SEQUENCE (capacity = S*K/E*cf per sequence) and
+    vmapped over the batch: the argsort/scatter/gather run group-local, so
+    under SPMD the batch axis stays data-sharded and the only cross-device
+    movement is the expert all-to-all on the model axis. A global-token-space
+    sort (the naive formulation) makes GSPMD replicate the (T*K, d) dispatch
+    buffer — measured 6.3 TB/step of collectives on dsv3 train_4k
+    (EXPERIMENTS.md §Perf cell B).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    ct = cfg.cdtype
+    xt = x.astype(ct)                                        # (B, S, d)
+
+    logits = jnp.einsum("bsd,de->bse", xt.astype(jnp.float32), p["router"])
+    if cfg.router_noise > 0.0 and rng is not None:
+        logits = logits + cfg.router_noise * jax.random.normal(
+            rng, logits.shape, jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (B, S, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary (Switch-style): E * sum_e f_e * P_e
+    me = probs.mean((0, 1))                                  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0) / (b * s * k)
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(max(1, round(s * k / e * cfg.capacity_factor)))
+
+    def dispatch_one(xs, es, gs):
+        """One sequence: xs (S, d), es (S, K), gs (S, K) -> (E, cap, d) batch
+        plus combine metadata."""
+        flat_e = es.reshape(-1)                              # (S*K,)
+        flat_tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+        flat_g = gs.reshape(-1).astype(jnp.float32)
+        order = jnp.argsort(flat_e, stable=True)             # local sort
+        se, st_, sg = flat_e[order], flat_tok[order], flat_g[order]
+        pos = jnp.arange(s * k)
+        grp_start = jnp.searchsorted(se, jnp.arange(e), side="left")
+        slot = pos - grp_start[se]
+        keep = slot < cap
+        dst = se * cap + jnp.where(keep, slot, 0)
+        ebatch = jnp.zeros((e * cap, d), ct).at[
+            jnp.where(keep, dst, e * cap - 1)].add(
+            jnp.where(keep[:, None], xs[st_], 0.0))
+        return ebatch.reshape(e, cap, d), (st_, sg, dst, keep)
+
+    ebatch, meta = jax.vmap(dispatch_one)(xt, idx, gate)     # (B, E, cap, d)
+    from . import sharding as _sh
+    ebatch = _sh.constrain_expert_batch(ebatch)
+    eout = _expert_ffn_batched(p, ebatch, cfg)               # (B, E, cap, d)
+    # NB: an explicit "gather experts before combine" reshard was tried here
+    # (sharding.constrain_combine) and REFUTED: 93.2s vs 84.5s collective —
+    # GSPMD's derived pattern beats the full-buffer all-gather. See
+    # EXPERIMENTS.md §Perf cell B iteration 4.
+    eout = _sh.constrain_expert_batch(eout)
+
+    def combine_one(eo, m):
+        st_, sg, dst, keep = m
+        eo_flat = eo.reshape(e * cap, d)
+        contrib = jnp.where(keep[:, None],
+                            eo_flat[dst] * sg[:, None].astype(ct), 0.0)
+        return jnp.zeros((s, d), ct).at[st_].add(contrib.astype(ct))
+
+    out = jax.vmap(combine_one)(eout, meta)                  # (B, S, d)
+
+    if cfg.n_shared_experts:
+        if cfg.mlp_kind == "swiglu":
+            hsh = _act(xt @ p["shared_wg"].astype(ct), cfg.act) \
+                * (xt @ p["shared_wi"].astype(ct))
+        else:
+            hsh = _act(xt @ p["shared_wi"].astype(ct), cfg.act)
+        out = out + hsh @ p["shared_wo"].astype(ct)
+
+    return out, aux
+
+
+def _expert_ffn_batched(p: PyTree, x: Array, cfg: ModelConfig) -> Array:
+    """x (B, E, C, d) -> (B, E, C, d); experts broadcast over the batch."""
+    ct = cfg.cdtype
+    if cfg.mlp_kind == "swiglu":
+        h = _act(jnp.einsum("becd,edf->becf", x, p["wg"].astype(ct)),
+                 cfg.act) * jnp.einsum("becd,edf->becf", x,
+                                       p["wi"].astype(ct))
+    else:
+        h = _act(jnp.einsum("becd,edf->becf", x, p["wi"].astype(ct)),
+                 cfg.act)
+    return jnp.einsum("becf,efd->becd", h, p["wo"].astype(ct))
+
+
+def moe_layer_dense_eval(p: PyTree, x: Array, cfg: ModelConfig) -> Array:
+    """Oracle: run every expert on every token, combine by full router probs
+    restricted to top-k. Used by tests to validate the sparse dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    ct = cfg.cdtype
+    xt = x.reshape(-1, d).astype(ct)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    mask = jnp.zeros_like(probs).at[jnp.arange(xt.shape[0])[:, None], idx].set(gate)
+    every = _expert_ffn(p, jnp.broadcast_to(xt, (e,) + xt.shape), cfg)  # (E,T,d)
+    out = jnp.einsum("te,etd->td", mask.astype(ct), every)
+    if cfg.n_shared_experts:
+        if cfg.mlp_kind == "swiglu":
+            hsh = _act(xt @ p["shared_wg"].astype(ct), cfg.act) \
+                * (xt @ p["shared_wi"].astype(ct))
+        else:
+            hsh = _act(xt @ p["shared_wi"].astype(ct), cfg.act)
+        out = out + hsh @ p["shared_wo"].astype(ct)
+    return out.reshape(b, s, d)

@@ -1,0 +1,328 @@
+"""Partition rules: map every parameter / batch / cache leaf to a
+PartitionSpec on the production mesh (axes: optional "pod", "data", "model").
+
+Strategy (DESIGN.md §4):
+- ``model`` = tensor parallelism: attention heads (fallback: head_dim, then
+  replicate), MLP d_ff, MoE experts (fallback: expert-internal d_ff when
+  n_experts < axis size, e.g. grok's 8 experts on a 16-way axis), mamba
+  inner channels / SSD heads, vocab (fallback: d_model when the vocab is not
+  divisible, e.g. whisper's 51865).
+- ``data`` = FSDP: the weight's d_model-like dimension is sharded over data
+  and all-gathered per layer inside the scan (ZeRO-3 style); optimizer
+  states inherit the same specs (ZeRO is free given the param specs).
+- ``pod`` = plain data parallelism (batch), replicated params.
+
+Stacked scan parameters carry a leading period axis -> specs are left-padded
+with None to the leaf ndim. Every rule checks divisibility and degrades to
+replication rather than failing, so *any* (arch x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+PyTree = Any
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str]) -> bool:
+    if axis is None:
+        return True
+    return n % int(np.prod([mesh.shape[a] for a in _tup(axis)])) == 0
+
+
+def _tup(axis) -> tuple:
+    if axis is None:
+        return ()
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params: PyTree, cfg: ModelConfig, mesh: Mesh,
+                fsdp_axis=("data",),
+                model_axis: Optional[str] = "model") -> PyTree:
+    """PartitionSpec pytree matching ``params`` (shapes only are consulted).
+
+    fsdp_axis may be a single axis or a tuple (pure-FSDP strategy shards
+    weights over BOTH mesh axes and keeps tensor dims unsharded);
+    model_axis=None disables tensor parallelism entirely.
+    """
+    fa = _tup(fsdp_axis)
+    fa = tuple(a for a in fa if a in mesh.shape) or None
+    ma = model_axis
+
+    def fsdp(dim: int):
+        return fa if fa and dim and _div(dim, mesh, fa) else None
+
+    def tp(dim: int):
+        return ma if ma and ma in mesh.shape and dim and _div(dim, mesh, ma) else None
+
+    def rule(path: str, shape: Sequence[int]) -> P:
+        nd = len(shape)
+        name = path.rsplit("/", 1)[-1]
+        in_moe = "/moe/" in path or path.endswith("moe")
+
+        def pad(spec: tuple) -> P:
+            return P(*((None,) * (nd - len(spec)) + spec))
+
+        # ---- embeddings / heads
+        if name == "embed":
+            v, d = shape[-2:]
+            if tp(v):
+                return pad((ma, fsdp(d)))
+            return pad((None, tp(d)))
+        if name == "lm_head":
+            d, v = shape[-2:]
+            if tp(v):
+                return pad((fsdp(d), ma))
+            return pad((tp(d), None))
+
+        # ---- attention (GQA)
+        if name == "wq" and nd >= 3:
+            d, h, dh = shape[-3:]
+            if tp(h):
+                return pad((fsdp(d), ma, None))
+            if tp(dh):
+                return pad((fsdp(d), None, ma))
+            return pad((fsdp(d), None, None))
+        if name in ("wk", "wv") and nd >= 3:
+            d, kv, dh = shape[-3:]
+            if tp(kv):
+                return pad((fsdp(d), ma, None))
+            return pad((fsdp(d), None, None))
+        if name == "wo" and nd >= 3 and not in_moe:
+            h, dh, d = shape[-3:]
+            if tp(h):
+                return pad((ma, None, fsdp(d)))
+            if tp(dh):
+                return pad((None, ma, fsdp(d)))
+            return pad((None, None, fsdp(d)))
+
+        # ---- MLA projections (2-D)
+        if name in ("wq_a", "wkv_a"):
+            d, r = shape[-2:]
+            return pad((fsdp(d), tp(r)))
+        if name in ("wq_b", "wkv_b"):
+            r, hq = shape[-2:]
+            return pad((fsdp(r), tp(hq)))
+        if name == "wq" and nd == 2:        # MLA dense q
+            d, hq = shape[-2:]
+            return pad((fsdp(d), tp(hq)))
+        if name == "wo" and nd == 2 and not in_moe:
+            hv, d = shape[-2:]
+            return pad((tp(hv), fsdp(d)))
+
+        # ---- MoE
+        if in_moe:
+            if name == "router":
+                return pad((None, None))
+            if name in ("wi", "wg") and nd >= 3:
+                e, d, f = shape[-3:]
+                if tp(e):
+                    # FSDP on the ff dim, NOT on d: a d-sharded expert weight
+                    # turns every expert einsum into a partial-sum with a
+                    # (B,E,cap,f) all-reduce over the data axis.
+                    return pad((ma, None, fsdp(f)))
+                return pad((None, fsdp(d), tp(f)))
+            if name == "wo" and nd >= 3:
+                e, f, d = shape[-3:]
+                if tp(e):
+                    return pad((ma, fsdp(f), None))
+                return pad((None, tp(f), fsdp(d)))
+            if name in ("shared_wi", "shared_wg"):
+                d, f = shape[-2:]
+                return pad((fsdp(d), tp(f)))
+            if name == "shared_wo":
+                f, d = shape[-2:]
+                return pad((tp(f), fsdp(d)))
+
+        # ---- dense MLP (2-D)
+        if name in ("wi", "wg"):
+            d, f = shape[-2:]
+            return pad((fsdp(d), tp(f)))
+        if name == "wo" and nd == 2:
+            f, d = shape[-2:]
+            return pad((tp(f), fsdp(d)))
+
+        # ---- mamba
+        if name == "in_proj":
+            d, z = shape[-2:]
+            return pad((fsdp(d), tp(z)))
+        if name == "out_proj":
+            din, d = shape[-2:]
+            return pad((tp(din), fsdp(d)))
+        if name == "conv_w":
+            k, c = shape[-2:]
+            return pad((None, tp(c)))
+        if name in ("conv_b", "norm_scale"):
+            return pad((tp(shape[-1]),))
+        if name in ("A_log", "D", "dt_bias"):
+            return pad((tp(shape[-1]),))
+
+        # ---- misc dense (mtp proj, enc_in_proj)
+        if name == "proj" or name == "enc_in_proj":
+            a, b = shape[-2:]
+            return pad((fsdp(a), tp(b)))
+
+        # ---- norms & anything else: replicate
+        return P()
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [rule(_path_str(p), x.shape) for p, x in leaves]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Data-parallel axes for the batch dim: pod (if present) + data."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> P:
+    """Spec for (B, S) token batches — batch over every DP axis that divides."""
+    axes = [a for a in batch_axes(mesh)]
+    keep: list = []
+    rem = batch
+    for a in axes:
+        if rem % mesh.shape[a] == 0:
+            keep.append(a)
+            rem //= mesh.shape[a]
+    return P(tuple(keep) if keep else None, None)
+
+
+def cache_specs(caches: PyTree, cfg: ModelConfig, mesh: Mesh, batch: int,
+                shard_seq: bool = False) -> PyTree:
+    """Decode-cache specs. Default: batch over DP axes, kv-heads/latent over
+    model when divisible. shard_seq=True (long-context, batch=1): the cache
+    *sequence* axis shards over data — the distributed flash-decode layout.
+    """
+    bspec = data_specs(cfg, mesh, batch)[0]
+
+    def rule(path: str, shape) -> P:
+        nd = len(shape)
+        name = path.rsplit("/", 1)[-1]
+        if name in ("len", "step") or nd == 0:
+            return P()
+        if name in ("k", "v"):                    # (B, T, KV, dh)
+            kv = shape[-2]
+            kvs = "model" if kv % mesh.shape["model"] == 0 else None
+            if shard_seq:
+                return P(None, "data", kvs, None)
+            return P(bspec, None, kvs, None)
+        if name == "ckv":                         # (B, T, rank)
+            return P(None, "data", None) if shard_seq else P(bspec, None, None)
+        if name == "k_rope":                      # (B, T, 1, rdim)
+            return P(None, "data", None, None) if shard_seq else P(bspec, None, None, None)
+        if name == "conv":                        # (B, K-1, conv_dim)
+            c = shape[-1]
+            cs = "model" if c % mesh.shape["model"] == 0 else None
+            return P(bspec, None, cs)
+        if name == "h":                           # (B, H, P, N)
+            hh = shape[-3]
+            hs = "model" if hh % mesh.shape["model"] == 0 else None
+            return P(bspec, hs, None, None)
+        return P()
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    # stacked period axis: leaves under blocks/ have one extra leading dim
+    out = []
+    for p, x in leaves:
+        ps = _path_str(p)
+        spec = rule(ps, x.shape[1:] if ps.startswith("blocks") and x.ndim > 0
+                    and "step" not in ps else x.shape)
+        if ps.startswith("blocks") and x.ndim > len(spec):
+            spec = P(*((None,) * (x.ndim - len(spec)) + tuple(spec)))
+        out.append(spec)
+    return jax.tree.unflatten(treedef, out)
+
+
+def to_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# Activation-sharding context: without an explicit constraint inside the
+# layer scan, GSPMD may legally choose weight-stationary propagation and
+# REPLICATE the token batch on every device (observed: 16x extra FLOPs on
+# the 16x16 mesh). The launcher wraps tracing in activation_sharding(); the
+# model calls constrain_tokens() on the (B, S, d) stream each layer.
+# --------------------------------------------------------------------------
+import contextlib
+
+_ACT_CTX: list = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes_: tuple):
+    _ACT_CTX.append((mesh, tuple(batch_axes_)))
+    try:
+        yield
+    finally:
+        _ACT_CTX.pop()
+
+
+def constrain_expert_batch(x):
+    """(B, E, cap, d) expert-dispatch buffer: batch over DP axes, experts
+    over the model axis (the boundary whose reshard IS the MoE all-to-all)."""
+    if not _ACT_CTX or x.ndim != 4:
+        return x
+    mesh, ba = _ACT_CTX[-1]
+    espec = "model" if ("model" in mesh.shape
+                        and x.shape[1] % mesh.shape["model"] == 0) else None
+    bspec = None
+    if ba:
+        total = int(np.prod([mesh.shape[a] for a in ba]))
+        if x.shape[0] % total == 0:
+            bspec = ba
+    if bspec is None and espec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, espec, None, None)))
+
+
+def constrain_combine(x):
+    """(B, E, cap, d) expert OUTPUT before the combine-gather: batch stays on
+    DP axes, experts explicitly UNsharded — one bf16 all-gather over the
+    model axis instead of the f32 (B, S*K, d) partial-sum pattern GSPMD
+    otherwise derives for a gather from an E-sharded buffer."""
+    if not _ACT_CTX or x.ndim != 4:
+        return x
+    mesh, ba = _ACT_CTX[-1]
+    bspec = None
+    if ba:
+        total = int(np.prod([mesh.shape[a] for a in ba]))
+        if x.shape[0] % total == 0:
+            bspec = ba
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, None, None, None)))
+
+
+def constrain_tokens(x):
+    """Pin a (B, ...) activation to batch-over-DP-axes sharding (no-op
+    outside an activation_sharding context or when B does not divide)."""
+    if not _ACT_CTX:
+        return x
+    mesh, ba = _ACT_CTX[-1]
+    if not ba:
+        return x
+    total = int(np.prod([mesh.shape[a] for a in ba]))
+    if x.ndim == 0 or x.shape[0] % total != 0:
+        return x
+    spec = P(ba, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

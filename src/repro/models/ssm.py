@@ -1,0 +1,202 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm
+(Dao & Gu, arXiv:2405.21060).
+
+Training/prefill uses the chunked form: quadratic attention-like matmuls
+within chunks (MXU-friendly) + a sequential inter-chunk state recurrence
+(lax.scan over S/chunk steps). Decode carries the (H, P, N) recurrent state —
+O(1) per token, which is what qualifies SSM/hybrid archs for the long_500k
+shape.
+
+Shapes follow the reference implementation: d_inner = expand*d_model,
+H = d_inner/head_dim heads, G state groups (B/C shared across H/G heads),
+N = ssm_state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_mamba(key: Array, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    din, ns, nh, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    conv_dim = din + 2 * g * ns
+    ks = jax.random.split(key, 4)
+    scale = 0.02
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * din + 2 * g * ns + nh),
+                                      jnp.float32) * scale).astype(cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * scale).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((din,), cfg.pdtype),
+        "out_proj": (jax.random.normal(ks[2], (din, d),
+                                       jnp.float32) * scale).astype(cfg.pdtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    din, ns, nh, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din: 2 * din + 2 * g * ns]
+    dt = zxbcdt[..., 2 * din + 2 * g * ns:]
+    return z, xBC, dt
+
+
+def _gated_norm(x: Array, z: Array, scale: Array) -> Array:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                 D: Array, chunk: int,
+                 h0: Optional[Array] = None) -> tuple[Array, Array]:
+    """SSD scan. x (b,s,h,p), dt (b,s,h) >0, A (h,)<0, B/C (b,s,g,n).
+
+    Returns (y (b,s,h,p), final state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    dA = dtc * A[None, None, None, :]                 # (b,nc,c,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumsum
+
+    # intra-chunk (attention-like): L[i,j] = exp(dA_cum[i]-dA_cum[j]) for j<=i
+    # NB: mask BEFORE exp — future entries have seg >> 0 and exp would
+    # overflow; where() after exp leaks NaN into the backward pass.
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (b,nc,c,c,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e30)
+    L = jnp.exp(seg)
+    Bh = jnp.repeat(Bc, rep, axis=3)                  # (b,nc,c,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bzchn,bzkhn->bzckh", Ch, Bh)  # (b,nc,c,c,h)
+    att = scores * L
+    xdt = xc * dtc[..., None]                          # (b,nc,c,h,p)
+    y_diag = jnp.einsum("bzckh,bzkhp->bzchp", att, xdt)
+
+    # chunk summary states: S_z = sum_j exp(dA_end - dA_cum[j]) B_j (dt_j x_j)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)       # (b,nc,c,h)
+    S = jnp.einsum("bzchn,bzchp->bzhnp",
+                   (Bh * decay_to_end[..., None]).astype(jnp.float32),
+                   xdt.astype(jnp.float32))                     # per-chunk, f32
+
+    # inter-chunk recurrence over nc (sequential scan, f32 state)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                  # (b,nc,h) f32
+
+    def body(carry, inp):
+        s_z, d_z = inp                 # (b,h,n,p), (b,h)
+        new = carry * d_z[..., None, None] + s_z
+        return new, carry              # emit state BEFORE this chunk
+
+    init = (jnp.zeros((b, h, n, p), jnp.float32) if h0 is None
+            else h0.transpose(0, 1, 3, 2).astype(jnp.float32))  # (b,h,n,p)
+    final, prev_states = jax.lax.scan(
+        body, init,
+        (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (b,nc,h,n,p)
+
+    # inter-chunk contribution: y_off[i] = C_i · (decay_from_start[i] * prev)
+    decay_from_start = jnp.exp(dA_cum)                          # (b,nc,c,h)
+    y_off = jnp.einsum("bzchn,bznhp->bzchp",
+                       (Ch * decay_from_start[..., None]).astype(jnp.float32),
+                       prev_states.transpose(0, 1, 3, 2, 4)).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(b, s, h, p) + x * D[None, None, :, None]
+    return y, final.transpose(0, 1, 3, 2)                       # (b,h,p,n)
+
+
+def mamba_forward(p: PyTree, x: Array, cfg: ModelConfig,
+                  cache: Optional[PyTree] = None
+                  ) -> tuple[Array, Optional[PyTree]]:
+    """Full-sequence forward (cache=None) or single-token decode step.
+
+    Decode cache: {"conv": (B, K-1, conv_dim), "h": (B, H, P, N)}.
+    """
+    b, s, d = x.shape
+    ct = cfg.cdtype
+    din, ns, nh, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    hd = cfg.ssm_head_dim
+    zxbcdt = x.astype(ct) @ p["in_proj"].astype(ct)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    A = -jnp.exp(p["A_log"])                                    # (h,) < 0
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,s,h)
+
+    if cache is None:
+        # depthwise causal conv over the sequence
+        k = cfg.ssm_conv
+        pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = sum(pad[:, i: i + s] * p["conv_w"].astype(ct)[i]
+                   for i in range(k))
+        xBC_c = jax.nn.silu(conv + p["conv_b"].astype(ct))
+        xs = xBC_c[..., :din].reshape(b, s, nh, hd)
+        B = xBC_c[..., din: din + g * ns].reshape(b, s, g, ns)
+        C = xBC_c[..., din + g * ns:].reshape(b, s, g, ns)
+        pad_s = (-s) % cfg.ssm_chunk
+        if pad_s:
+            xs = jnp.pad(xs, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
+            B = jnp.pad(B, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            C = jnp.pad(C, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        y, hfinal = _ssd_chunked(xs, dt, A, B, C, p["D"], cfg.ssm_chunk)
+        y = y[:, :s].reshape(b, s, din)
+        y = _gated_norm(y, z, p["norm_scale"]).astype(ct)
+        out = y @ p["out_proj"].astype(ct)
+        new_cache = {
+            "conv": pad[:, -(k - 1):] if k > 1 else jnp.zeros((b, 0, xBC.shape[-1]), ct),
+            "h": hfinal.astype(ct),
+        }
+        return out, new_cache
+
+    # ---- decode: s == 1
+    k = cfg.ssm_conv
+    conv_in = jnp.concatenate([cache["conv"].astype(ct), xBC], axis=1)  # (b,k,cd)
+    conv = (conv_in * p["conv_w"].astype(ct)[None]).sum(1, keepdims=True)
+    xBC_c = jax.nn.silu(conv + p["conv_b"].astype(ct))                  # (b,1,cd)
+    xs = xBC_c[..., :din].reshape(b, nh, hd)
+    B = xBC_c[..., din: din + g * ns].reshape(b, g, ns)
+    C = xBC_c[..., din + g * ns:].reshape(b, g, ns)
+    rep = nh // g
+    Bh = jnp.repeat(B, rep, axis=1)                                     # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dt1 = dt[:, 0]                                                      # (b,h)
+    dA = jnp.exp(dt1 * A[None, :])                                      # (b,h)
+    hprev = cache["h"].astype(jnp.float32)                              # (b,h,p,n)
+    hnew = (hprev * dA[..., None, None]
+            + jnp.einsum("bhn,bhp->bhpn", Bh.astype(jnp.float32),
+                         (xs * dt1[..., None]).astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", hnew, Ch.astype(jnp.float32))
+    y = y.astype(ct) + xs * p["D"].astype(ct)[None, :, None]
+    y = y.reshape(b, 1, din)
+    y = _gated_norm(y, z, p["norm_scale"]).astype(ct)
+    out = y @ p["out_proj"].astype(ct)
+    new_cache = {"conv": conv_in[:, 1:], "h": hnew.astype(cache["h"].dtype)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> PyTree:
+    din, ns, nh, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    conv_dim = din + 2 * g * ns
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, ns), dtype),
+    }

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .compression import compress_grads, decompress_grads, CompressionState
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "compress_grads", "decompress_grads", "CompressionState"]

@@ -1,0 +1,87 @@
+"""AdamW with cosine schedule and global-norm clipping.
+
+Moments are kept in float32 regardless of (bf16) parameter dtype; with the
+FSDP param specs from models/sharding.py the moments inherit the same
+sharding, giving ZeRO semantics without extra machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    step: jax.Array
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    f32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(f32, params),
+                      nu=jax.tree.map(f32, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+                 params: PyTree) -> tuple[PyTree, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_lr(cfg, step)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** step)
+        vhat = v / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                     # decoupled decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(new_m, new_v, step), metrics

@@ -1,0 +1,66 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization
+substrate, DESIGN.md §4).
+
+int8 stochastic-rounding quantisation with per-tensor scales and error
+feedback (the quantisation residual is carried and added to the next step's
+gradient, preserving convergence). The same hook compresses the ACO deposit
+all-reduce — the deposit matrix is gradient-shaped (see islands.py).
+
+Under jit+sharding the quantised tensors are what crosses the DP axis; with
+8-bit payloads the all-reduce bytes drop 4x vs f32 (2x vs bf16).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressionState(NamedTuple):
+    error: PyTree          # error-feedback residuals (f32)
+
+
+def compression_init(params: PyTree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params))
+
+
+def _quantize(x: jax.Array, key: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    y = x / scale
+    if key is not None:                       # stochastic rounding
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    q = jnp.clip(y, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: PyTree, state: Optional[CompressionState],
+                   key: Optional[jax.Array] = None
+                   ) -> tuple[PyTree, PyTree, CompressionState]:
+    """-> (quantised int8 pytree, scales pytree, new error state)."""
+    if state is None:
+        state = compression_init(grads)
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(state.error)
+    qs, scales, new_errs = [], [], []
+    for i, (g, e) in enumerate(zip(leaves, errs)):
+        gf = g.astype(jnp.float32) + e
+        k = None if key is None else jax.random.fold_in(key, i)
+        q, s = _quantize(gf, k)
+        deq = q.astype(jnp.float32) * s
+        qs.append(q)
+        scales.append(s)
+        new_errs.append(gf - deq)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            CompressionState(jax.tree.unflatten(treedef, new_errs)))
+
+
+def decompress_grads(q: PyTree, scales: PyTree, dtype=jnp.float32) -> PyTree:
+    return jax.tree.map(
+        lambda qq, ss: (qq.astype(jnp.float32) * ss).astype(dtype), q, scales)

@@ -1,0 +1,3 @@
+from .supervisor import Supervisor, SupervisorConfig
+
+__all__ = ["Supervisor", "SupervisorConfig"]

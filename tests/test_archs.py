@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests (task requirement): every assigned arch in
+its REDUCED form runs one forward + one train step + 2 decode steps on CPU,
+asserting output shapes and finiteness. The FULL configs are exercised only
+by the dry-run (no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import steps as st
+from repro.models import model
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(1234)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke(arch):
+    cfg = configs.get_reduced(arch)
+    params = model.init_params(jax.random.fold_in(KEY, hash(arch) % 997), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1), (B, S), 0,
+                              cfg.vocab)
+    labels = jnp.roll(toks, -1, axis=1)
+    enc = None
+    if cfg.enc_dec:
+        enc = jax.random.normal(jax.random.fold_in(KEY, 2),
+                                (B, 8, cfg.d_model), jnp.float32)
+
+    # forward
+    logits, aux = model.forward(params, toks, cfg, enc_frames=enc)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one train step
+    opt_cfg = adamw.AdamWConfig(total_steps=10, warmup_steps=1)
+    step = st.make_train_step(cfg, opt_cfg, remat=True)
+    new_params, opt2, metrics = step(params, adamw.adamw_init(params),
+                                     toks, labels, enc)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, new_params))
+    assert max(moved) > 0
+
+    # decode 2 steps
+    caches = model.init_cache(cfg, B, 24, enc_len=8 if cfg.enc_dec else 0)
+    if cfg.enc_dec:
+        enc_out = model.encode(params, enc, cfg)
+        caches = model.fill_cross_caches(params, caches, enc_out, cfg)
+    serve = st.make_serve_step(cfg)
+    tok = toks[:, :1]
+    for _ in range(2):
+        tok, caches = serve(params, tok, caches)
+        assert tok.shape == (B, 1)
+        assert int(tok.min()) >= 0 and int(tok.max()) < cfg.vocab
+    assert int(caches["step"]) == 2
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_instantiates_abstractly(arch):
+    """FULL configs must build abstract param/optimizer trees (no memory)."""
+    from repro.launch import specs as sp
+    cfg = configs.get(arch)
+    params_abs = sp.abstract_params(cfg)
+    n_leaves = len(jax.tree.leaves(params_abs))
+    assert n_leaves > 4
+    # analytic vs abstract param count agreement (<0.5% — analytic skips
+    # norm vectors and biases)
+    abstract_n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_abs))
+    analytic_n = cfg.param_count()
+    assert abs(abstract_n - analytic_n) / analytic_n < 5e-3, (
+        arch, abstract_n, analytic_n)
+
+
+def test_train_loss_decreases_end_to_end(tmp_path):
+    """~30 steps of the real trainer on a tiny model must cut the loss."""
+    from repro.launch.train import train
+    out = train("olmo_1b", steps=40, batch=4, seq=64, reduced=True,
+                ckpt_dir=str(tmp_path), ckpt_every=20, log_every=5,
+                lr=3e-3)
+    assert out["losses"][0] > out["final_loss"], out["losses"]
+    assert out["final_loss"] < out["losses"][0] * 0.9
+
+
+def test_train_restart_resumes(tmp_path):
+    from repro.launch.train import train
+    train("olmo_1b", steps=10, batch=2, seq=32, reduced=True,
+          ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
+    # second call resumes from step 10 checkpoint and extends to 12
+    out = train("olmo_1b", steps=12, batch=2, seq=32, reduced=True,
+                ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
+    assert out["final_loss"] is not None
+
+
+def test_serve_end_to_end():
+    from repro.launch.serve import serve
+    out = serve("qwen2_vl_2b", batch=2, prompt_len=8, gen=6, reduced=True)
+    arr = np.asarray(out["tokens"])
+    assert arr.shape == (2, 6)
+    assert out["decode_s_per_token"] > 0

@@ -1,0 +1,202 @@
+"""ACO core behaviour tests: construction validity, deposit equivalence,
+selection semantics, config plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import aco, pheromone, sampling, strategies, tsp
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ------------------------------------------------------------------- tsp
+def test_distance_rounding_modes():
+    inst_raw = tsp.random_instance(16, seed=0)
+    d = inst_raw.distances()
+    assert d.shape == (16, 16)
+    assert np.allclose(d, d.T)
+    assert (np.diag(d) == 0).all()
+
+    coords = np.array([[0.0, 0.0], [3.0, 4.0]])
+    euc = tsp.TSPInstance("t", coords, "EUC_2D").distances()
+    assert euc[0, 1] == 5.0
+    att = tsp.TSPInstance("t", coords, "ATT").distances()
+    # pseudo-Euclidean: ceil-ish of sqrt(25/10)=1.58 -> 2
+    assert att[0, 1] == 2.0
+
+
+def test_nn_lists_are_nearest():
+    inst = tsp.random_instance(50, seed=1)
+    d = jnp.asarray(inst.distances())
+    nn = np.asarray(tsp.nn_lists(d, 10))
+    dn = np.asarray(d)
+    for i in range(50):
+        claimed = dn[i, nn[i]]
+        others = np.delete(dn[i], np.concatenate([[i], nn[i]]))
+        assert claimed.max() <= others.min() + 1e-6
+        assert i not in nn[i]
+
+
+def test_tour_length_matches_numpy():
+    inst = tsp.random_instance(30, seed=2)
+    d = inst.distances()
+    tour = np.random.RandomState(0).permutation(30).astype(np.int32)
+    expected = d[tour, np.roll(tour, -1)].sum()
+    got = tsp.tour_length(jnp.asarray(d), jnp.asarray(tour))
+    np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+
+def test_parse_tsplib_roundtrip():
+    text = """NAME : toy
+EDGE_WEIGHT_TYPE : EUC_2D
+NODE_COORD_SECTION
+1 0.0 0.0
+2 3.0 4.0
+3 6.0 8.0
+EOF
+"""
+    inst = tsp.parse_tsplib(text)
+    assert inst.name == "toy"
+    assert inst.n == 3
+    assert inst.distances()[0, 1] == 5.0
+
+
+# ------------------------------------------------------------- construction
+@pytest.mark.parametrize("method", ["data_parallel", "task_choice",
+                                    "task_baseline", "nn_list"])
+def test_construction_yields_valid_tours(method):
+    inst = tsp.random_instance(40, seed=3)
+    prob = aco.make_problem(inst, nn_k=10)
+    tau = jnp.ones((40, 40))
+    ci = strategies.choice_matrix(tau, prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(
+        jax.random.fold_in(KEY, 1), prob.dist, ci, 20, method=method,
+        nn=prob.nn, tau=tau, eta=prob.eta)
+    tours = np.asarray(res.tours)
+    assert tours.shape == (20, 40)
+    assert tsp.is_valid_tour(tours)
+    lens = np.asarray(res.lengths)
+    d = np.asarray(prob.dist)
+    for k in range(20):
+        np.testing.assert_allclose(
+            lens[k], d[tours[k], np.roll(tours[k], -1)].sum(), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=hst.integers(4, 60), m=hst.integers(1, 30), seed=hst.integers(0, 999))
+def test_construction_property_valid_permutations(n, m, seed):
+    inst = tsp.random_instance(n, seed=seed)
+    prob = aco.make_problem(inst, nn_k=min(5, n - 1))
+    ci = strategies.choice_matrix(jnp.ones((n, n)), prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(
+        jax.random.fold_in(KEY, seed), prob.dist, ci, m)
+    assert tsp.is_valid_tour(np.asarray(res.tours))
+
+
+def test_selection_rules_are_distributionally_sane():
+    """Exact samplers must hit empirical frequencies ~ weights."""
+    w = jnp.array([[0.1, 0.2, 0.3, 0.4]] * 4000)
+    for name in ("roulette", "gumbel"):
+        keys = jax.random.fold_in(KEY, hash(name) % 1000)
+        picks = sampling.select(name, keys, w)
+        freq = np.bincount(np.asarray(picks), minlength=4) / picks.shape[0]
+        np.testing.assert_allclose(freq, [0.1, 0.2, 0.3, 0.4], atol=0.04)
+
+
+def test_iroulette_biased_but_ordered():
+    """I-Roulette (paper's rule) is not exact but must prefer larger weights."""
+    w = jnp.array([[0.1, 0.2, 0.3, 0.4]] * 4000)
+    picks = sampling.iroulette(jax.random.fold_in(KEY, 3), w)
+    freq = np.bincount(np.asarray(picks), minlength=4) / picks.shape[0]
+    assert freq[0] < freq[1] < freq[2] < freq[3]
+
+
+def test_selectors_never_pick_zero_weight():
+    w = jnp.tile(jnp.array([[0.0, 1.0, 0.0, 2.0]]), (1000, 1))
+    for name in ("roulette", "iroulette", "gumbel", "greedy"):
+        picks = np.asarray(sampling.select(name, jax.random.fold_in(KEY, 5), w))
+        assert set(picks) <= {1, 3}, name
+
+
+# ------------------------------------------------------------- pheromone
+@pytest.mark.parametrize("strategy", list(pheromone.STRATEGIES))
+def test_deposit_strategies_equivalent(strategy):
+    n, m = 36, 18
+    inst = tsp.random_instance(n, seed=4)
+    prob = aco.make_problem(inst, 8)
+    ci = strategies.choice_matrix(jnp.ones((n, n)), prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(jax.random.fold_in(KEY, 9), prob.dist,
+                                     ci, m)
+    w = 1.0 / res.lengths
+    base = pheromone.deposit(n, res.tours, w, "scatter")
+    got = pheromone.deposit(n, res.tours, w, strategy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_evaporation():
+    tau = jnp.full((10, 10), 2.0)
+    np.testing.assert_allclose(pheromone.evaporate(tau, 0.5), 1.0)
+
+
+def test_full_update_conserves_symmetry():
+    n, m = 24, 10
+    inst = tsp.random_instance(n, seed=5)
+    prob = aco.make_problem(inst, 8)
+    ci = strategies.choice_matrix(jnp.ones((n, n)), prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(jax.random.fold_in(KEY, 11), prob.dist,
+                                     ci, m)
+    tau = jnp.ones((n, n))
+    out = np.asarray(pheromone.update(tau, res.tours, 1.0 / res.lengths, 0.5))
+    np.testing.assert_allclose(out, out.T, rtol=1e-6)
+    assert (out > 0).all()
+
+
+# ------------------------------------------------------------------ engine
+@pytest.mark.parametrize("variant", ["as", "mmas", "acs"])
+def test_variants_run_and_improve(variant):
+    inst = tsp.circle_instance(32, seed=6)
+    cfg = aco.ACOConfig(iterations=15, variant=variant, selection="gumbel")
+    st = aco.run(inst, cfg)
+    assert np.isfinite(float(st.best_len))
+    assert tsp.is_valid_tour(np.asarray(st.best_tour))
+    # random tour on a circle is far from optimal; 15 iters must beat 2x opt
+    assert float(st.best_len) < 2.0 * inst.known_optimum
+
+
+def test_mmas_respects_trail_limits():
+    inst = tsp.random_instance(20, seed=7)
+    cfg = aco.ACOConfig(iterations=10, variant="mmas")
+    prob = aco.make_problem(inst, cfg.nn_k)
+    st = aco.init_colony(inst, cfg)
+    for _ in range(10):
+        st, _ = aco.colony_step(prob, st, cfg)
+    tau_max = cfg.q / (cfg.rho * float(st.best_len))
+    tau = np.asarray(st.tau)
+    assert tau.max() <= tau_max * (1 + 1e-5)
+    assert tau.min() >= tau_max / (2 * 20) * (1 - 1e-5)
+
+
+def test_run_scan_matches_python_loop():
+    inst = tsp.random_instance(16, seed=8)
+    cfg = aco.ACOConfig(iterations=5, selection="gumbel")
+    prob = aco.make_problem(inst, cfg.nn_k)
+    st0 = aco.init_colony(inst, cfg)
+    st_loop = st0
+    for _ in range(5):
+        st_loop, _ = aco.colony_step(prob, st_loop, cfg)
+    st_scan, _ = aco.run_scan(prob, st0, cfg, 5)
+    np.testing.assert_allclose(np.asarray(st_loop.tau),
+                               np.asarray(st_scan.tau), rtol=1e-6)
+    assert float(st_loop.best_len) == float(st_scan.best_len)
+
+
+def test_pallas_path_equals_reference_quality():
+    inst = tsp.circle_instance(24, seed=9)
+    base = aco.run(inst, aco.ACOConfig(iterations=10, seed=3))
+    fast = aco.run(inst, aco.ACOConfig(iterations=10, seed=3, use_pallas=True))
+    # same RNG stream, same semantics -> identical best length
+    np.testing.assert_allclose(float(base.best_len), float(fast.best_len),
+                               rtol=1e-5)

@@ -1,0 +1,159 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles.
+
+Shape/dtype sweeps + hypothesis property tests per the task requirements.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.kernels import ops, ref
+from repro.kernels import choice_info as ci_k
+from repro.kernels import tour_select as ts_k
+from repro.kernels import pheromone_update as pu_k
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------- choice_info
+@pytest.mark.parametrize("n", [8, 48, 100, 280, 513])
+@pytest.mark.parametrize("alpha,beta", [(1.0, 2.0), (2.0, 3.0), (0.5, 2.5)])
+def test_choice_info_matches_ref(n, alpha, beta):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, n))
+    tau = jax.random.uniform(k1, (n, n)) + 0.1
+    eta = jax.random.uniform(k2, (n, n)) + 0.1
+    got = ci_k.choice_info(tau, eta, alpha, beta, interpret=True)
+    exp = ref.choice_info(tau, eta, alpha, beta)
+    np.testing.assert_allclose(got, exp, rtol=1e-6)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 128), (256, 512), (16, 256)])
+def test_choice_info_block_shape_invariance(bm, bn):
+    tau = jax.random.uniform(jax.random.fold_in(KEY, 1), (200, 200)) + 0.1
+    eta = jax.random.uniform(jax.random.fold_in(KEY, 2), (200, 200)) + 0.1
+    got = ci_k.choice_info(tau, eta, 1.0, 2.0, block_m=bm, block_n=bn,
+                           interpret=True)
+    exp = ref.choice_info(tau, eta, 1.0, 2.0)
+    np.testing.assert_allclose(got, exp, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- tour_select
+def _select_case(m, n, mode, seed=0, block_n=512):
+    k = jax.random.fold_in(KEY, seed * 131 + m * 7 + n)
+    rows = jax.random.uniform(k, (m, n)) + 0.01
+    vis = jax.random.uniform(jax.random.fold_in(k, 1), (m, n)) < 0.5
+    vis = vis.at[:, -1].set(False)  # keep >=1 selectable city per ant
+    rand = jax.random.uniform(jax.random.fold_in(k, 2), (m, n),
+                              minval=1e-6, maxval=1.0)
+    got = ts_k.tour_select(rows, vis, rand, mode, block_n=block_n,
+                           interpret=True)
+    exp = ref.tour_select(rows, vis.astype(jnp.int8), rand, mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("mode", ["iroulette", "gumbel", "greedy"])
+@pytest.mark.parametrize("m,n", [(1, 7), (5, 48), (16, 513), (48, 48),
+                                 (100, 1002), (3, 2392)])
+def test_tour_select_matches_ref(mode, m, n):
+    _select_case(m, n, mode)
+
+
+@pytest.mark.parametrize("block_n", [128, 256, 512, 1024])
+def test_tour_select_tile_invariance(block_n):
+    """The paper's tiling must not change the selected city."""
+    _select_case(32, 1002, "iroulette", seed=9, block_n=block_n)
+
+
+def test_tour_select_never_picks_visited():
+    m, n = 64, 300
+    k = jax.random.fold_in(KEY, 77)
+    rows = jax.random.uniform(k, (m, n)) + 0.01
+    vis = jax.random.uniform(jax.random.fold_in(k, 1), (m, n)) < 0.8
+    vis = vis.at[:, 0].set(False)
+    rand = jax.random.uniform(jax.random.fold_in(k, 2), (m, n),
+                              minval=1e-6, maxval=1.0)
+    for mode in ("iroulette", "gumbel", "greedy"):
+        got = np.asarray(ts_k.tour_select(rows, vis, rand, mode,
+                                          interpret=True))
+        picked_visited = np.asarray(vis)[np.arange(m), got]
+        assert not picked_visited.any(), mode
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=hst.integers(1, 40), n=hst.integers(2, 200),
+       mode=hst.sampled_from(["iroulette", "gumbel", "greedy"]),
+       seed=hst.integers(0, 2**16))
+def test_tour_select_property(m, n, mode, seed):
+    _select_case(m, n, mode, seed=seed)
+
+
+# ----------------------------------------------------------- pheromone_update
+def _pheromone_case(n, m, rho, seed=0, blocks=(128, 128, 512)):
+    k = jax.random.fold_in(KEY, seed * 997 + n * 13 + m)
+    tau = jax.random.uniform(k, (n, n)) + 0.5
+    tours = jnp.stack([
+        jax.random.permutation(jax.random.fold_in(k, 100 + i), n)
+        for i in range(m)
+    ]).astype(jnp.int32)
+    w = jax.random.uniform(jax.random.fold_in(k, 999), (m,)) + 0.1
+    frm = tours.ravel()
+    to = jnp.roll(tours, -1, axis=-1).ravel()
+    wrep = jnp.repeat(w, n)
+    f2 = jnp.concatenate([frm, to])
+    t2 = jnp.concatenate([to, frm])
+    w2 = jnp.concatenate([wrep, wrep])
+    got = pu_k.pheromone_update(tau, f2, t2, w2, rho,
+                                block_i=blocks[0], block_j=blocks[1],
+                                block_e=blocks[2], interpret=True)
+    exp = ref.pheromone_update(tau, f2, t2, w2, rho)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+    return got
+
+
+@pytest.mark.parametrize("n,m", [(8, 4), (48, 48), (100, 30), (280, 64),
+                                 (130, 60)])
+@pytest.mark.parametrize("rho", [0.1, 0.5])
+def test_pheromone_update_matches_ref(n, m, rho):
+    _pheromone_case(n, m, rho)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32, 64), (64, 128, 256),
+                                    (128, 128, 512), (128, 64, 1024)])
+def test_pheromone_update_block_invariance(blocks):
+    _pheromone_case(150, 40, 0.5, seed=3, blocks=blocks)
+
+
+def test_pheromone_update_symmetry():
+    """Symmetric edge duplication must give a symmetric deposit on
+    a symmetric starting matrix."""
+    n, m = 96, 24
+    k = jax.random.fold_in(KEY, 5)
+    base = jax.random.uniform(k, (n, n))
+    tau = base + base.T
+    tours = jnp.stack([
+        jax.random.permutation(jax.random.fold_in(k, i), n) for i in range(m)
+    ]).astype(jnp.int32)
+    w = jnp.ones((m,), jnp.float32)
+    out = np.asarray(ops.pheromone_update(tau, tours, w, 0.5))
+    np.testing.assert_allclose(out, out.T, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=hst.integers(4, 120), m=hst.integers(1, 30),
+       rho=hst.floats(0.05, 0.95), seed=hst.integers(0, 2**16))
+def test_pheromone_update_property(n, m, rho, seed):
+    _pheromone_case(n, m, float(np.float32(rho)), seed=seed)
+
+
+def test_pheromone_update_edge_padding_is_inert():
+    """-1 endpoints (padding) must not contribute."""
+    n = 64
+    tau = jnp.ones((n, n))
+    frm = jnp.array([-1] * 100, jnp.int32)
+    to = jnp.array([-1] * 100, jnp.int32)
+    w = jnp.ones((100,), jnp.float32)
+    out = pu_k.pheromone_update(tau, frm, to, w, 0.25, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 0.75 * np.ones((n, n)),
+                               rtol=1e-6)
