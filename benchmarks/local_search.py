@@ -1,0 +1,80 @@
+"""Local-search timing table (DESIGN.md §7): per-round cost of the batched
+NN-restricted 2-opt / Or-opt passes, JAX vs the Pallas two_opt route, and
+the quality they buy per round on a known-optimum instance.
+
+    PYTHONPATH=src python benchmarks/local_search.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aco, localsearch, strategies, tsp
+
+try:
+    from .timing import time_fn
+except ImportError:  # run directly: python benchmarks/local_search.py
+    from timing import time_fn
+
+# (n, m): instance size x batch of tours improved at once
+SIZES = ((100, 32), (280, 64))
+FULL_SIZES = ((100, 32), (280, 64), (442, 128), (1002, 256))
+ROUNDS = 8
+
+
+def _tours(n: int, m: int):
+    inst = tsp.circle_instance(n, seed=n)
+    prob = aco.make_problem(inst, min(30, n - 1))
+    ci = strategies.choice_matrix(jnp.ones((n, n)), prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(jax.random.PRNGKey(n), prob.dist, ci, m)
+    return inst, prob, res
+
+
+def rows(sizes=SIZES):
+    out = []
+    for n, m in sizes:
+        inst, prob, res = _tours(n, m)
+        r = {"n": n, "m": m, "k": int(prob.nn.shape[1]), "rounds": ROUNDS,
+             "start_gap_pct":
+                 100 * (float(np.asarray(res.lengths).mean())
+                        / inst.known_optimum - 1)}
+        for name, cfg in (
+            ("2opt", localsearch.LocalSearchConfig("2opt", rounds=ROUNDS)),
+            ("2opt_first", localsearch.LocalSearchConfig(
+                "2opt", rounds=ROUNDS, improvement="first")),
+            ("oropt", localsearch.LocalSearchConfig("oropt", rounds=ROUNDS)),
+            ("2opt_oropt", localsearch.LocalSearchConfig(
+                "2opt_oropt", rounds=ROUNDS)),
+            ("2opt_pallas", localsearch.LocalSearchConfig(
+                "2opt", rounds=ROUNDS, use_pallas=True)),
+        ):
+            fn = jax.jit(lambda t, c=cfg: localsearch.improve_with_lengths(
+                prob.dist, prob.nn, t, c))
+            r[f"{name}_ms"] = round(time_fn(fn, res.tours, warmup=1,
+                                            iters=3), 2)
+            _, lens = fn(res.tours)
+            r[f"{name}_gap_pct"] = round(
+                100 * (float(np.asarray(lens).mean())
+                       / inst.known_optimum - 1), 2)
+        out.append(r)
+    return out
+
+
+def main(sizes=SIZES):
+    print(f"local search: {ROUNDS} rounds over (m) tours, ms total "
+          f"+ mean gap-to-optimum after")
+    hdr = None
+    for r in rows(sizes):
+        if hdr is None:
+            hdr = list(r.keys())
+            print(",".join(hdr))
+        print(",".join(str(r[k]) for k in hdr))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(FULL_SIZES if ap.parse_args().full else SIZES)

@@ -1,49 +1,102 @@
-"""Claim C6: solution quality of the parallel designs matches the sequential
-code (paper §V: "results are similar to those obtained by the sequential
-code"). Gap-to-optimum on circle instances (known optimum by construction)
-after equal iteration budgets, plus the sequential reference."""
+"""Claim C6 + local-search trajectory: gap-to-optimum on known-optimum
+instances (circle: optimum by construction; even-side grid: boustrophedon)
+after equal iteration budgets — the sequential reference, the paper's
+parallel designs, and MMAS/AS with and without the batched local search
+(DESIGN.md §7).
+
+Emits ``BENCH_quality.json`` next to the repo root so future PRs have a
+quality/perf trajectory to compare against.
+
+    PYTHONPATH=src python benchmarks/quality.py [--smoke] [--out PATH]
+"""
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import json
+import os
+import time
 
 from repro.core import aco, sequential, tsp
 
-CASES = ((48, 60), (100, 80))
+# (kind, size, iterations); grid size is the side (n = side^2).
+CASES = (("circle", 48, 60), ("circle", 100, 80), ("grid", 8, 60))
+SMOKE_CASES = (("circle", 32, 20),)
+
+
+def make_instance(kind: str, size: int) -> tsp.TSPInstance:
+    if kind == "circle":
+        return tsp.circle_instance(size, seed=size)
+    if kind == "grid":
+        return tsp.grid_instance(size)
+    raise ValueError(kind)
+
+
+def configs(iters: int):
+    """Named ACO configs under an equal iteration budget."""
+    return (
+        ("iroulette", aco.ACOConfig(iterations=iters)),
+        ("gumbel", aco.ACOConfig(iterations=iters, selection="gumbel")),
+        ("nnlist", aco.ACOConfig(iterations=iters, construction="nn_list")),
+        ("pallas", aco.ACOConfig(iterations=iters, use_pallas=True)),
+        ("mmas", aco.ACOConfig(iterations=iters, variant="mmas",
+                               selection="gumbel")),
+        # with local search: same budgets, improved tours drive the deposit
+        ("mmas_2opt", aco.ACOConfig(iterations=iters, variant="mmas",
+                                    selection="gumbel", local_search="2opt",
+                                    ls_tours="iteration_best",
+                                    ls_rounds=96)),
+        ("as_2opt", aco.ACOConfig(iterations=iters, local_search="2opt_oropt",
+                                  ls_tours="all", ls_rounds=8)),
+    )
 
 
 def rows(cases=CASES):
     out = []
-    for n, iters in cases:
-        inst = tsp.circle_instance(n, seed=n)
+    for kind, size, iters in cases:
+        inst = make_instance(kind, size)
         opt = inst.known_optimum
-        seq = sequential.SequentialAS(inst.distances(), m=n, seed=1)
+        assert opt is not None, (kind, size)
+        seq = sequential.SequentialAS(inst.distances(), m=inst.n, seed=1)
         seq.run(iters)
-        r = {"n": n, "iters": iters, "optimum": opt,
+        r = {"instance": inst.name, "kind": kind, "n": inst.n,
+             "iters": iters, "optimum": opt,
              "seq_gap_pct": 100 * (seq.best_len / opt - 1)}
-        for name, cfg in (
-            ("iroulette", aco.ACOConfig(iterations=iters)),
-            ("gumbel", aco.ACOConfig(iterations=iters, selection="gumbel")),
-            ("nnlist", aco.ACOConfig(iterations=iters, construction="nn_list")),
-            ("pallas", aco.ACOConfig(iterations=iters, use_pallas=True)),
-            ("mmas", aco.ACOConfig(iterations=iters, variant="mmas",
-                                   selection="gumbel")),
-        ):
+        for name, cfg in configs(iters):
+            t0 = time.perf_counter()
             st = aco.run(inst, cfg)
             r[f"{name}_gap_pct"] = 100 * (float(st.best_len) / opt - 1)
+            r[f"{name}_s"] = round(time.perf_counter() - t0, 2)
         out.append(r)
     return out
 
 
-def main(cases=CASES):
+def main(cases=CASES, out_path: str | None = "BENCH_quality.json"):
     print("quality (gap-to-known-optimum %, equal iteration budget)")
-    hdr = None
-    for r in rows(cases):
-        if hdr is None:
-            hdr = list(r.keys())
-            print(",".join(hdr))
+    results = rows(cases)
+    hdr = [k for k in results[0] if not k.endswith("_s")]
+    print(",".join(hdr))
+    for r in results:
         print(",".join(f"{r[k]:.2f}" if isinstance(r[k], float) else str(r[k])
                        for k in hdr))
+    if out_path:
+        payload = {
+            "benchmark": "quality",
+            "schema": 1,
+            "unix_time": int(time.time()),
+            "rows": results,
+        }
+        parent = os.path.dirname(os.path.abspath(out_path))
+        os.makedirs(parent, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {os.path.abspath(out_path)}")
+    return results
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small case (CI)")
+    ap.add_argument("--out", default="BENCH_quality.json")
+    args = ap.parse_args()
+    main(SMOKE_CASES if args.smoke else CASES, args.out)

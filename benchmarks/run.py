@@ -11,7 +11,7 @@ import argparse
 import sys
 import time
 
-from . import (fig4_overall, fig5_pheromone, quality, roofline,
+from . import (fig4_overall, fig5_pheromone, local_search, quality, roofline,
                table2_tour_construction, table3_pheromone)
 
 TABLES = {
@@ -24,6 +24,8 @@ TABLES = {
         fig4_overall.FULL_SIZES if full else fig4_overall.SIZES),
     "fig5": lambda full: fig5_pheromone.main(fig5_pheromone.SIZES),
     "quality": lambda full: quality.main(),
+    "local_search": lambda full: local_search.main(
+        local_search.FULL_SIZES if full else local_search.SIZES),
     "roofline": lambda full: roofline.main(),
 }
 

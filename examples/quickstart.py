@@ -47,6 +47,16 @@ def main() -> None:
     gap_mm = 100 * (float(state_mm.best_len) / inst.known_optimum - 1)
     print(f"[MMAS]              best={float(state_mm.best_len):.1f} gap={gap_mm:.2f}%")
 
+    # MMAS + batched local search (DESIGN.md §7): the iteration-best tour is
+    # polished by NN-restricted 2-opt before it deposits, entirely on-device.
+    cfg_ls = aco.ACOConfig(iterations=80, variant="mmas", selection="gumbel",
+                           local_search="2opt", ls_tours="iteration_best",
+                           ls_rounds=64)
+    state_ls = aco.run(inst, cfg_ls)
+    gap_ls = 100 * (float(state_ls.best_len) / inst.known_optimum - 1)
+    print(f"[MMAS + 2-opt]      best={float(state_ls.best_len):.1f} gap={gap_ls:.2f}%")
+    assert tsp.is_valid_tour(np.asarray(state_ls.best_tour))
+
 
 if __name__ == "__main__":
     main()

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import pheromone, strategies, tsp
+from . import localsearch, pheromone, strategies, tsp
 
 Array = jax.Array
 
@@ -36,6 +36,13 @@ class ACOConfig:
     iterations: int = 100
     seed: int = 0
     use_pallas: bool = False       # route choice/tour/deposit through kernels/
+    # Local search (DESIGN.md §7): polish constructed tours before deposit.
+    local_search: str = "none"     # localsearch.STRATEGIES key
+    ls_every: int = 1              # apply every k-th iteration
+    ls_tours: str = "all"          # all | iteration_best
+    ls_rounds: int = 24            # bounded improvement rounds per application
+    ls_improvement: str = "best"   # best | first
+    ls_seg_max: int = 3            # Or-opt max segment length
     # MMAS
     mmas_best: str = "iteration"   # iteration | global
     # ACS
@@ -106,6 +113,58 @@ def _deposit_weights(lengths: Array, cfg: ACOConfig) -> Array:
     return cfg.q / lengths
 
 
+def ls_config(cfg: ACOConfig) -> localsearch.LocalSearchConfig:
+    """Derive the LocalSearchConfig embedded in an ACOConfig."""
+    return localsearch.LocalSearchConfig(
+        kind=cfg.local_search, rounds=cfg.ls_rounds,
+        improvement=cfg.ls_improvement, seg_max=cfg.ls_seg_max,
+        use_pallas=cfg.use_pallas)
+
+
+def polish_tours(problem: Problem, tours: Array,
+                 cfg: ACOConfig) -> tuple[Array, Array]:
+    """Local-search-improve (m, n) tours; returns (tours, lengths).
+
+    Shared by colony_step (below) and the island exchange (islands.py),
+    which polishes migrated elite tours before they deposit.
+    """
+    out = localsearch.improve(problem.dist, problem.nn, tours, ls_config(cfg))
+    return out, tsp.tour_length(problem.dist, out)
+
+
+def _apply_local_search(problem: Problem, res: strategies.TourResult,
+                        iteration: Array, cfg: ACOConfig
+                        ) -> strategies.TourResult:
+    """Polish constructed tours per cfg.ls_tours, every cfg.ls_every iters.
+
+    The ls_every gate is a lax.cond on the traced iteration counter: it
+    skips the work on a single colony, but under vmap (the island model
+    batches colony_step over islands) cond lowers to select and both
+    branches run — there ls_every>1 only changes *which* iterations'
+    results are kept, not the compute.  The while_loop early-exit in
+    localsearch.improve keeps the dead branch cheap (converged tours exit
+    after one evaluation round).
+    """
+    if cfg.ls_tours not in ("all", "iteration_best"):
+        raise ValueError(f"unknown ls_tours {cfg.ls_tours!r}")
+
+    def run(args):
+        tours, lengths = args
+        if cfg.ls_tours == "iteration_best":
+            ib = jnp.argmin(lengths)
+            pol, pol_len = polish_tours(problem, tours[ib][None, :], cfg)
+            return tours.at[ib].set(pol[0]), lengths.at[ib].set(pol_len[0])
+        return polish_tours(problem, tours, cfg)
+
+    if cfg.ls_every <= 1:
+        tours, lengths = run((res.tours, res.lengths))
+    else:
+        tours, lengths = jax.lax.cond(
+            iteration % cfg.ls_every == 0, run, lambda args: args,
+            (res.tours, res.lengths))
+    return strategies.TourResult(tours, lengths)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def colony_step(problem: Problem, state: ColonyState,
                 cfg: ACOConfig) -> tuple[ColonyState, Array]:
@@ -129,6 +188,11 @@ def colony_step(problem: Problem, state: ColonyState,
         nn=problem.nn, tau=state.tau, eta=problem.eta,
         alpha=cfg.alpha, beta=cfg.beta,
     )
+
+    if cfg.local_search != "none":
+        # improved tours drive the deposit: LS runs before best-tracking
+        # and before the pheromone update (DESIGN.md §7).
+        res = _apply_local_search(problem, res, state.iteration, cfg)
 
     it_best_idx = jnp.argmin(res.lengths)
     it_best_len = res.lengths[it_best_idx]

@@ -64,12 +64,17 @@ def init_island_states(instance: tsp.TSPInstance, cfg: IslandConfig,
 
 
 def _exchange(st: aco.ColonyState, problem: aco.Problem, cfg: IslandConfig,
-              axis: str | tuple[str, ...]) -> aco.ColonyState:
-    """Ring migration + pheromone mixing. st leaves have leading local axis 1."""
+              axis: str | tuple[str, ...],
+              axis_sizes: dict[str, int]) -> aco.ColonyState:
+    """Ring migration + pheromone mixing. st leaves have leading local axis 1.
+
+    axis_sizes carries the static mesh extents (mesh.shape) — axis sizes
+    must be known at trace time for the ppermute ring and the early-out.
+    """
     ax = (axis,) if isinstance(axis, str) else tuple(axis)
     size = 1
     for a in ax:
-        size *= jax.lax.axis_size(a)
+        size *= axis_sizes[a]
     if size == 1:
         return st
 
@@ -78,10 +83,14 @@ def _exchange(st: aco.ColonyState, problem: aco.Problem, cfg: IslandConfig,
     if cfg.migrate:
         # flatten multi-axis ring: successor along the last axis with carry.
         perm_axis = ax[-1]
-        sz = jax.lax.axis_size(perm_axis)
+        sz = axis_sizes[perm_axis]
         perm = [(i, (i + 1) % sz) for i in range(sz)]
         imm_tour = jax.lax.ppermute(st.best_tour, perm_axis, perm)
         imm_len = jax.lax.ppermute(st.best_len, perm_axis, perm)
+        if cfg.aco.local_search != "none":
+            # polish the immigrant before it competes and deposits
+            # (DESIGN.md §7): the local leading axis doubles as the batch.
+            imm_tour, imm_len = aco.polish_tours(problem, imm_tour, cfg.aco)
         better = imm_len < st.best_len
         best_tour = jnp.where(better, imm_tour, st.best_tour)
         best_len = jnp.where(better, imm_len, st.best_len)
@@ -124,7 +133,8 @@ def run_islands(instance: tsp.TSPInstance, cfg: IslandConfig, mesh: Mesh,
             st1, _ = aco.run_scan(problem, st1, cfg.aco, cfg.exchange_every)
             return st1
         st = jax.vmap(one)(st)
-        return _exchange(st, problem, cfg, island_axes)
+        return _exchange(st, problem, cfg, island_axes,
+                         {a: mesh.shape[a] for a in island_axes})
 
     step = jax.jit(round_fn)
     for r in range(cfg.rounds):

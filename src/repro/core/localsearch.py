@@ -1,0 +1,292 @@
+"""GPU-batched local search: NN-restricted 2-opt and Or-opt (DESIGN.md §7).
+
+The paper parallelises tour construction and pheromone update; the strong
+follow-ups (Chitty's candidate-list 2-opt, Skinderowicz's iteration-best
+local search) couple ACO with on-device local search. This module improves
+all ``m`` ant tours per iteration entirely on-device, in a form that jits,
+scans across ACO iterations and shards across the island mesh:
+
+- **2-opt**, restricted to the instance's nearest-neighbour lists: for every
+  tour position ``i`` (city ``a``, successor ``a'``) and every candidate
+  ``c`` in ``nn[a]`` (position ``j``, successor ``c'``), the move replaces
+  edges (a, a') and (c, c') with (a, c) and (a', c') by reversing the
+  segment between them.  All ``n*k`` move deltas per ant form one
+  ``(m, n*k)`` tensor; a masked argmin (best-improvement) or first-True
+  argmax (first-improvement) picks one move per ant per round, applied as a
+  vectorised segment-reversal gather.  Rounds run inside a bounded
+  ``lax.scan`` so the whole search is one compiled program.
+- **Or-opt** (segment relocation): segments of length L = 1..seg_max are
+  removed and re-inserted after a candidate city from ``nn[s0]``.  The move
+  is applied with a fractional-sort-key argsort, which keeps the update a
+  fixed-shape tensor op.
+
+Both passes are strictly non-worsening: a move is only applied when its
+delta clears ``-min_delta`` (degenerate moves — candidate equal to the
+current successor/predecessor — are masked explicitly, so float cancellation
+can never fabricate an improvement).
+
+``STRATEGIES`` mirrors ``pheromone.STRATEGIES``: a name -> round-function
+registry that ``ACOConfig.local_search`` selects from.  The 2-opt delta
+scan optionally routes through the Pallas kernel (kernels/two_opt.py) via
+``use_pallas``, identical in output to the pure-JAX path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+from . import tsp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSearchConfig:
+    kind: str = "2opt"           # none | 2opt | oropt | 2opt_oropt
+    rounds: int = 24             # bounded improvement rounds (lax.scan length)
+    improvement: str = "best"    # best | first (move choice per round)
+    seg_max: int = 3             # Or-opt max relocated-segment length
+    # Strict-improvement threshold in ABSOLUTE tour-length units: a move is
+    # applied only when delta < -min_delta, which stops f32 cancellation
+    # noise from ping-ponging zero-gain moves until rounds are exhausted.
+    # The default suits coordinate scales O(1e3) (all in-repo generators);
+    # scale it down for unit-scale instances or improvements below it are
+    # silently ignored.
+    min_delta: float = 1e-3
+    use_pallas: bool = False     # 2-opt delta scan via kernels/two_opt.py
+
+
+class Move(NamedTuple):
+    delta: Array   # (m,) best/first move delta (+inf when none)
+    i: Array       # (m,) tour position of the move anchor
+    j: Array       # (m,) tour position of the candidate endpoint
+
+
+def tour_positions(tours: Array) -> Array:
+    """pos[ant, city] = position of city in that ant's tour."""
+    m, n = tours.shape
+    ants = jnp.arange(m)[:, None]
+    steps = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n))
+    return jnp.zeros((m, n), jnp.int32).at[ants, tours].set(steps)
+
+
+# --------------------------------------------------------------------------
+# 2-opt
+# --------------------------------------------------------------------------
+
+def _two_opt_operands(dist: Array, nn: Array, tours: Array):
+    """Gathered distance tensors for all (position, candidate) 2-opt moves.
+
+    Returns (add1, add2, rem1, rem2, valid, j) each (m, n, k): the move at
+    (ant, i, c) removes edges (a, a') and (c, c') and adds (a, c), (a', c').
+    """
+    m, n = tours.shape
+    pos = tour_positions(tours)
+    a = tours                                        # (m, n)
+    a_nxt = jnp.roll(tours, -1, axis=-1)
+    c = nn[a]                                        # (m, n, k)
+    k = c.shape[-1]
+    j = jnp.take_along_axis(pos, c.reshape(m, -1), axis=1).reshape(m, n, k)
+    c_nxt = jnp.take_along_axis(
+        tours, ((j + 1) % n).reshape(m, -1), axis=1).reshape(m, n, k)
+    add1 = dist[a[..., None], c]                     # d(a, c)
+    add2 = dist[a_nxt[..., None], c_nxt]             # d(a', c')
+    rem1 = jnp.broadcast_to(dist[a, a_nxt][..., None], add1.shape)
+    rem2 = dist[c, c_nxt]
+    # degenerate moves share an edge with the tour: their true delta is 0,
+    # but float cancellation could make it spuriously negative — mask them.
+    valid = (c != a_nxt[..., None]) & (c_nxt != a[..., None])
+    return add1, add2, rem1, rem2, valid, j
+
+
+def _reduce_moves(add1, add2, rem1, rem2, valid, cfg: LocalSearchConfig):
+    """(m, n, k) move operands -> per-ant (delta, flat move index)."""
+    m = add1.shape[0]
+    flat = lambda x: x.reshape(m, -1)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.two_opt_best(
+            flat(add1), flat(add2), flat(rem1), flat(rem2), flat(valid),
+            thr=cfg.min_delta, mode=cfg.improvement)
+    return kref.two_opt_best(flat(add1), flat(add2), flat(rem1), flat(rem2),
+                             flat(valid), thr=cfg.min_delta,
+                             mode=cfg.improvement)
+
+
+def best_two_opt_move(dist: Array, nn: Array, tours: Array,
+                      cfg: LocalSearchConfig) -> Move:
+    add1, add2, rem1, rem2, valid, j = _two_opt_operands(dist, nn, tours)
+    m, n, k = j.shape
+    val, idx = _reduce_moves(add1, add2, rem1, rem2, valid, cfg)
+    safe = jnp.clip(idx, 0, n * k - 1)
+    i_sel = (safe // k).astype(jnp.int32)
+    j_sel = jnp.take_along_axis(j.reshape(m, -1), safe[:, None], axis=1)[:, 0]
+    return Move(val, i_sel, j_sel)
+
+
+def apply_two_opt(tours: Array, i: Array, j: Array, do: Array) -> Array:
+    """Reverse positions (min(i,j), max(i,j)] per ant where ``do`` holds."""
+    n = tours.shape[1]
+    lo = jnp.minimum(i, j)[:, None]
+    hi = jnp.maximum(i, j)[:, None]
+    idx = jnp.arange(n, dtype=jnp.int32)[None, :]
+    within = (idx > lo) & (idx <= hi)
+    src = jnp.where(within, lo + 1 + hi - idx, idx)
+    src = jnp.where(do[:, None], src, idx)
+    return jnp.take_along_axis(tours, src, axis=1)
+
+
+def two_opt_round(dist: Array, nn: Array, tours: Array,
+                  cfg: LocalSearchConfig) -> Array:
+    mv = best_two_opt_move(dist, nn, tours, cfg)
+    return apply_two_opt(tours, mv.i, mv.j, mv.delta < -cfg.min_delta)
+
+
+# --------------------------------------------------------------------------
+# Or-opt (segment relocation)
+# --------------------------------------------------------------------------
+
+def best_or_opt_move(dist: Array, nn: Array, tours: Array, seg_len: int,
+                     cfg: LocalSearchConfig) -> Move:
+    """Best relocation of a ``seg_len`` segment, candidates from nn[s0].
+
+    Move (ant, p, c): remove the segment s0..s_end at positions
+    [p, p+seg_len-1] (non-wrapping) and insert it between c and c's
+    successor.  delta = d(prev,next) + d(c,s0) + d(s_end,c') -
+    d(prev,s0) - d(s_end,next) - d(c,c').
+    """
+    m, n = tours.shape
+    pos = tour_positions(tours)
+    s0 = tours
+    s_end = jnp.roll(tours, -(seg_len - 1), axis=-1)
+    prev = jnp.roll(tours, 1, axis=-1)
+    nxt = jnp.roll(tours, -seg_len, axis=-1)
+    c = nn[s0]                                       # (m, n, k)
+    k = c.shape[-1]
+    q = jnp.take_along_axis(pos, c.reshape(m, -1), axis=1).reshape(m, n, k)
+    c_nxt = jnp.take_along_axis(
+        tours, ((q + 1) % n).reshape(m, -1), axis=1).reshape(m, n, k)
+    delta = (
+        dist[prev, nxt][..., None] + dist[s0[..., None], c]
+        + dist[s_end[..., None], c_nxt]
+        - dist[prev, s0][..., None] - dist[s_end, nxt][..., None]
+        - dist[c, c_nxt]
+    )
+    p = jnp.arange(n, dtype=jnp.int32)[None, :, None]
+    in_seg = (q >= p) & (q < p + seg_len)
+    valid = (~in_seg) & (c != prev[..., None]) & (p <= n - seg_len)
+    val, idx = kref.select_move(delta.reshape(m, -1), valid.reshape(m, -1),
+                                thr=cfg.min_delta, mode=cfg.improvement)
+    safe = jnp.clip(idx, 0, n * k - 1)
+    p_sel = (safe // k).astype(jnp.int32)
+    q_sel = jnp.take_along_axis(q.reshape(m, -1), safe[:, None], axis=1)[:, 0]
+    return Move(val, p_sel, q_sel)
+
+
+def apply_or_opt(tours: Array, p: Array, q: Array, seg_len: int,
+                 do: Array) -> Array:
+    """Relocate the segment at [p, p+seg_len) to just after position q.
+
+    Implemented as a fractional-sort-key argsort: non-segment cities keep
+    their integer position as key, segment cities get keys strictly between
+    q and q+1 — a stable fixed-shape formulation of splice-and-insert.
+    """
+    n = tours.shape[1]
+    idx = jnp.arange(n, dtype=jnp.int32)[None, :]
+    in_seg = (idx >= p[:, None]) & (idx < p[:, None] + seg_len)
+    off = (idx - p[:, None]).astype(jnp.float32)
+    key = jnp.where(in_seg,
+                    q[:, None].astype(jnp.float32)
+                    + (off + 1.0) / (seg_len + 1.0),
+                    idx.astype(jnp.float32))
+    key = jnp.where(do[:, None], key, idx.astype(jnp.float32))
+    order = jnp.argsort(key, axis=1)
+    return jnp.take_along_axis(tours, order, axis=1)
+
+
+def or_opt_round(dist: Array, nn: Array, tours: Array,
+                 cfg: LocalSearchConfig) -> Array:
+    for seg_len in range(1, min(cfg.seg_max, tours.shape[1] - 2) + 1):
+        mv = best_or_opt_move(dist, nn, tours, seg_len, cfg)
+        tours = apply_or_opt(tours, mv.i, mv.j, seg_len,
+                             mv.delta < -cfg.min_delta)
+    return tours
+
+
+# --------------------------------------------------------------------------
+# Driver + registry
+# --------------------------------------------------------------------------
+
+def _round_2opt(dist, nn, tours, cfg):
+    return two_opt_round(dist, nn, tours, cfg)
+
+
+def _round_oropt(dist, nn, tours, cfg):
+    return or_opt_round(dist, nn, tours, cfg)
+
+
+def _round_2opt_oropt(dist, nn, tours, cfg):
+    return or_opt_round(dist, nn, two_opt_round(dist, nn, tours, cfg), cfg)
+
+
+def _round_none(dist, nn, tours, cfg):
+    del dist, nn, cfg
+    return tours
+
+
+RoundFn = Callable[[Array, Array, Array, LocalSearchConfig], Array]
+
+# name -> one-improvement-round function (mirrors pheromone.STRATEGIES)
+STRATEGIES: dict[str, RoundFn] = {
+    "none": _round_none,
+    "2opt": _round_2opt,
+    "oropt": _round_oropt,
+    "2opt_oropt": _round_2opt_oropt,
+}
+
+
+def improve(dist: Array, nn: Array, tours: Array,
+            cfg: LocalSearchConfig) -> Array:
+    """Run up to ``cfg.rounds`` improvement rounds on all tours at once.
+
+    Never worsens any tour; jit/scan/vmap/shard_map compatible (fixed
+    shapes; the only data-dependent control flow is the bounded
+    while_loop below, which those transforms all support).
+    """
+    if cfg.kind not in STRATEGIES:
+        raise ValueError(
+            f"unknown local-search strategy {cfg.kind!r}; "
+            f"expected one of {tuple(STRATEGIES)}")
+    if cfg.kind == "none" or cfg.rounds <= 0 or tours.shape[1] < 4:
+        return tours
+    round_fn = STRATEGIES[cfg.kind]
+
+    # bounded while_loop instead of a fixed-length scan: once no tour
+    # changed in a round the search has converged (every further round
+    # would re-evaluate the full (m, n*k) move tensor for nothing).
+    def cond(carry):
+        _, r, changed = carry
+        return (r < cfg.rounds) & changed
+
+    def body(carry):
+        t, r, _ = carry
+        t2 = round_fn(dist, nn, t, cfg)
+        return t2, r + 1, jnp.any(t2 != t)
+
+    tours, _, _ = jax.lax.while_loop(
+        cond, body, (tours, jnp.int32(0), jnp.bool_(True)))
+    return tours
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def improve_with_lengths(dist: Array, nn: Array, tours: Array,
+                         cfg: LocalSearchConfig) -> tuple[Array, Array]:
+    """improve() + recomputed closed-tour lengths (one fused program)."""
+    out = improve(dist, nn, tours, cfg)
+    return out, tsp.tour_length(dist, out)

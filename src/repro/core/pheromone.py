@@ -161,8 +161,19 @@ def update(tau: Array, tours: Array, w: Array, rho: float,
 
 def local_update_acs(tau: Array, frm: Array, to: Array, xi: float,
                      tau0: float) -> Array:
-    """ACS local pheromone rule on the just-crossed edges (both directions)."""
-    upd = lambda m: (1 - xi) * m + xi * tau0
-    tau = tau.at[frm, to].set(upd(tau[frm, to]))
-    tau = tau.at[to, frm].set(upd(tau[to, frm]))
-    return tau
+    """ACS local pheromone rule on the just-crossed edges (both directions).
+
+    The sequential rule tau <- (1-xi) tau + xi tau0 is applied once per
+    crossing.  It is a contraction toward tau0, so c applications compose to
+    the closed form tau <- (1-xi)^c tau + (1 - (1-xi)^c) tau0 *independent
+    of order* — which is what we compute: per-edge crossing counts via a
+    deterministic scatter-add, then the closed form.  (A scatter-``set``
+    with duplicate edge indices — multiple ants crossing the same edge —
+    has unspecified winner order and made the result nondeterministic.)
+    """
+    n = tau.shape[0]
+    ones = jnp.ones(frm.shape, tau.dtype)
+    counts = jnp.zeros((n, n), tau.dtype).at[frm, to].add(ones)
+    counts = counts + counts.T               # symmetric: both directions
+    factor = jnp.power(jnp.asarray(1.0 - xi, tau.dtype), counts)
+    return factor * tau + (1.0 - factor) * tau0

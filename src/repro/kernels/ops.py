@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from . import choice_info as _ci
 from . import pheromone_update as _pu
 from . import tour_select as _ts
+from . import two_opt as _to
 
 
 def _interpret_default() -> bool:
@@ -62,3 +63,11 @@ def pheromone_update(tau: jax.Array, tours: jax.Array, w: jax.Array,
 def pheromone_update_edges(tau: jax.Array, frm: jax.Array, to: jax.Array,
                            w: jax.Array, rho: float) -> jax.Array:
     return _pu.pheromone_update(tau, frm, to, w, rho, interpret=INTERPRET)
+
+
+def two_opt_best(add1: jax.Array, add2: jax.Array, rem1: jax.Array,
+                 rem2: jax.Array, valid: jax.Array, thr: float = 0.0,
+                 mode: str = "best") -> tuple[jax.Array, jax.Array]:
+    """Per-ant best/first 2-opt move over (m, M) gathered move operands."""
+    return _to.two_opt_best(add1, add2, rem1, rem2, valid, thr=float(thr),
+                            mode=mode, interpret=INTERPRET)

@@ -37,6 +37,39 @@ def tour_select(rows: jax.Array, visited: jax.Array, rand: jax.Array,
     return jnp.argmax(v, axis=-1).astype(jnp.int32)
 
 
+def select_move(delta: jax.Array, valid: jax.Array, thr: float = 0.0,
+                mode: str = "best") -> tuple[jax.Array, jax.Array]:
+    """Local-search move selection over an (m, M) move-delta tensor.
+
+    best: (min masked delta, first argmin index), delta=+inf if all masked.
+    first: (delta, index) of the first improving move, (+inf, INT32_MAX)
+    when none improves by more than thr.  The single source of truth for
+    the selection semantics — core/localsearch.py uses it for both the
+    2-opt and Or-opt passes, and the Pallas kernel is tested against it.
+    """
+    ok = valid != 0
+    if mode == "best":
+        v = jnp.where(ok, delta, 1e30)
+        idx = jnp.argmin(v, axis=-1).astype(jnp.int32)
+        val = jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
+        return val, idx
+    if mode == "first":
+        imp = ok & (delta < -thr)
+        has = imp.any(axis=-1)
+        idx = jnp.argmax(imp, axis=-1).astype(jnp.int32)
+        val = jnp.take_along_axis(delta, idx[:, None], axis=1)[:, 0]
+        return (jnp.where(has, val, 1e30),
+                jnp.where(has, idx, jnp.int32(2**31 - 1)))
+    raise ValueError(mode)
+
+
+def two_opt_best(add1: jax.Array, add2: jax.Array, rem1: jax.Array,
+                 rem2: jax.Array, valid: jax.Array, thr: float = 0.0,
+                 mode: str = "best") -> tuple[jax.Array, jax.Array]:
+    """Per-ant 2-opt move selection over (m, M) gathered move operands."""
+    return select_move(add1 + add2 - rem1 - rem2, valid, thr, mode)
+
+
 def pheromone_update(tau: jax.Array, frm: jax.Array, to: jax.Array,
                      w: jax.Array, rho: float) -> jax.Array:
     n = tau.shape[0]

@@ -1,0 +1,28 @@
+"""hypothesis import shim: use the real library when installed, otherwise
+skip the property-based tests while keeping every deterministic test in the
+same module runnable (a hard `from hypothesis import ...` used to fail the
+whole module at collection time on a clean checkout)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+    def given(*args, **kwargs):
+        del args, kwargs
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*args, **kwargs):
+        del args, kwargs
+        return lambda f: f
+
+    class _StrategyStub:
+        """Accepts any hst.<strategy>(...) call made at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hst = _StrategyStub()

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hyputil import given, settings, hst
 
 from repro.core import aco, pheromone, sampling, strategies, tsp
 
@@ -134,6 +134,29 @@ def test_deposit_strategies_equivalent(strategy):
     got = pheromone.deposit(n, res.tours, w, strategy)
     np.testing.assert_allclose(np.asarray(got), np.asarray(base),
                                rtol=1e-4, atol=1e-6)
+
+
+def test_acs_local_update_deterministic():
+    """Regression: duplicate edges (several ants crossing the same edge)
+    must give the order-independent sequential-composition result, not a
+    last-writer-wins scatter."""
+    n, xi, tau0 = 6, 0.2, 0.5
+    tau = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n) / 10 + 1
+    frm = jnp.array([0, 0, 2, 0, 4], jnp.int32)
+    to = jnp.array([1, 1, 3, 1, 5], jnp.int32)
+    got = np.asarray(pheromone.local_update_acs(tau, frm, to, xi, tau0))
+
+    exp = np.asarray(tau).copy()
+    for f, t in zip(np.asarray(frm), np.asarray(to)):
+        for a, b in ((f, t), (t, f)):
+            exp[a, b] = (1 - xi) * exp[a, b] + xi * tau0
+    np.testing.assert_allclose(got, exp, rtol=1e-6)
+
+    # edge-order permutation invariance (bitwise)
+    perm = np.array([4, 2, 0, 3, 1])
+    got_p = np.asarray(pheromone.local_update_acs(
+        tau, frm[perm], to[perm], xi, tau0))
+    np.testing.assert_array_equal(got, got_p)
 
 
 def test_evaporation():

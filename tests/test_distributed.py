@@ -54,6 +54,29 @@ def test_islands_8dev_beat_single_island():
     assert "GAP" in out
 
 
+def test_islands_4dev_with_local_search_polish_elites():
+    """Island exchange with local search: migrated elite tours are polished
+    before they compete/deposit (DESIGN.md §7); result stays a valid tour
+    and reaches the optimum fast on a circle instance."""
+    out = _run_subprocess("""
+        import jax, numpy as np
+        from repro.core import tsp, aco, islands
+        mesh = jax.make_mesh((4,), ("data",))
+        inst = tsp.circle_instance(48, seed=5)
+        cfg = islands.IslandConfig(
+            aco=aco.ACOConfig(selection="gumbel", local_search="2opt",
+                              ls_tours="iteration_best", ls_rounds=16),
+            exchange_every=3, rounds=2, mix_lambda=0.1)
+        st = islands.run_islands(inst, cfg, mesh, island_axes=("data",))
+        tour, best = islands.global_best(st)
+        assert tsp.is_valid_tour(tour), "invalid tour"
+        gap = best / inst.known_optimum - 1.0
+        print("GAP", gap)
+        assert gap < 0.02, f"gap too large: {gap}"
+    """)
+    assert "GAP" in out
+
+
 def test_sharded_colony_8dev_matches_quality():
     out = _run_subprocess("""
         import jax, numpy as np

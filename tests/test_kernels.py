@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hyputil import given, settings, hst
 
 from repro.kernels import ops, ref
 from repro.kernels import choice_info as ci_k

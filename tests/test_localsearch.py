@@ -1,0 +1,169 @@
+"""Local-search subsystem invariants (DESIGN.md §7):
+
+- every 2-opt/Or-opt output is a valid permutation;
+- tour length is monotonically non-increasing round by round;
+- the Pallas two_opt kernel matches the kernels/ref.py oracle bit-for-bit
+  and the use_pallas improve path returns identical tours;
+- colony_step with local search still jits and scans;
+- MMAS+2opt closes the optimum gap on circle_instance(256) versus plain
+  MMAS at an equal iteration count (the subsystem's acceptance bar).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aco, localsearch, strategies, tsp
+from repro.kernels import ref
+from repro.kernels import two_opt as to_k
+
+KEY = jax.random.PRNGKey(13)
+
+KINDS = [k for k in localsearch.STRATEGIES if k != "none"]
+
+
+def _tours(n, m, seed=0, nn_k=10):
+    inst = tsp.random_instance(n, seed=seed)
+    prob = aco.make_problem(inst, nn_k)
+    ci = strategies.choice_matrix(jnp.ones((n, n)), prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(jax.random.fold_in(KEY, seed),
+                                     prob.dist, ci, m)
+    return prob, res
+
+
+# ----------------------------------------------------------- permutations
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("improvement", ["best", "first"])
+def test_outputs_are_valid_permutations(kind, improvement):
+    prob, res = _tours(50, 12, seed=1)
+    cfg = localsearch.LocalSearchConfig(kind=kind, rounds=15,
+                                        improvement=improvement)
+    out, lens = localsearch.improve_with_lengths(prob.dist, prob.nn,
+                                                 res.tours, cfg)
+    assert tsp.is_valid_tour(np.asarray(out))
+    # lengths returned must be the true closed-tour lengths
+    d = np.asarray(prob.dist)
+    t = np.asarray(out)
+    for i in range(t.shape[0]):
+        np.testing.assert_allclose(
+            np.asarray(lens)[i], d[t[i], np.roll(t[i], -1)].sum(), rtol=1e-5)
+
+
+# ------------------------------------------------------------ monotonicity
+@pytest.mark.parametrize("kind", KINDS)
+def test_length_monotonically_non_increasing(kind):
+    prob, res = _tours(40, 10, seed=2)
+    cfg = localsearch.LocalSearchConfig(kind=kind, rounds=1)
+    t = res.tours
+    prev = np.asarray(res.lengths)
+    for _ in range(12):
+        t, lens = localsearch.improve_with_lengths(prob.dist, prob.nn, t, cfg)
+        lens = np.asarray(lens)
+        assert (lens <= prev + 1e-2).all()
+        assert tsp.is_valid_tour(np.asarray(t))
+        prev = lens
+
+
+def test_converges_to_optimum_on_circle():
+    """On a circle instance 2-opt+Or-opt must untangle any tour fully."""
+    inst = tsp.circle_instance(64, seed=3)
+    prob = aco.make_problem(inst, 12)
+    ci = strategies.choice_matrix(jnp.ones((64, 64)), prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(KEY, prob.dist, ci, 8)
+    cfg = localsearch.LocalSearchConfig(kind="2opt_oropt", rounds=60)
+    _, lens = localsearch.improve_with_lengths(prob.dist, prob.nn,
+                                               res.tours, cfg)
+    assert float(np.asarray(lens).max()) <= inst.known_optimum * 1.001
+
+
+# ------------------------------------------------------------- Pallas kernel
+@pytest.mark.parametrize("mode", ["best", "first"])
+@pytest.mark.parametrize("m,M", [(1, 7), (5, 480), (16, 1537), (33, 4096)])
+def test_two_opt_kernel_matches_ref(mode, m, M):
+    k = jax.random.fold_in(KEY, m * 10007 + M)
+    ks = jax.random.split(k, 5)
+    a1, a2, r1, r2 = (jax.random.uniform(ki, (m, M)) * 100 for ki in ks[:4])
+    valid = jax.random.uniform(ks[4], (m, M)) < 0.7
+    gv, gi = to_k.two_opt_best(a1, a2, r1, r2, valid, thr=1.0, mode=mode,
+                               interpret=True)
+    ev, ei = ref.two_opt_best(a1, a2, r1, r2, valid, thr=1.0, mode=mode)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ei))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(ev))
+
+
+@pytest.mark.parametrize("block_n", [128, 512, 2048])
+def test_two_opt_kernel_tile_invariance(block_n):
+    k = jax.random.fold_in(KEY, block_n)
+    ks = jax.random.split(k, 5)
+    a1, a2, r1, r2 = (jax.random.uniform(ki, (9, 3000)) * 50 for ki in ks[:4])
+    valid = jax.random.uniform(ks[4], (9, 3000)) < 0.5
+    gv, gi = to_k.two_opt_best(a1, a2, r1, r2, valid, block_n=block_n,
+                               interpret=True)
+    ev, ei = ref.two_opt_best(a1, a2, r1, r2, valid)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ei))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(ev))
+
+
+@pytest.mark.parametrize("improvement", ["best", "first"])
+def test_pallas_improve_path_identical(improvement):
+    prob, res = _tours(48, 8, seed=4)
+    mk = lambda p: localsearch.LocalSearchConfig(
+        kind="2opt", rounds=20, improvement=improvement, use_pallas=p)
+    t0, _ = localsearch.improve_with_lengths(prob.dist, prob.nn, res.tours,
+                                             mk(False))
+    t1, _ = localsearch.improve_with_lengths(prob.dist, prob.nn, res.tours,
+                                             mk(True))
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+
+
+# ------------------------------------------------------------- engine wiring
+@pytest.mark.parametrize("variant", ["as", "mmas", "acs"])
+@pytest.mark.parametrize("ls_tours", ["all", "iteration_best"])
+def test_colony_step_with_ls_jits_and_scans(variant, ls_tours):
+    inst = tsp.circle_instance(32, seed=5)
+    cfg = aco.ACOConfig(iterations=4, variant=variant, selection="gumbel",
+                        local_search="2opt_oropt", ls_tours=ls_tours,
+                        ls_rounds=6, ls_every=2)
+    prob = aco.make_problem(inst, cfg.nn_k)
+    st = aco.init_colony(inst, cfg)
+    st, _ = aco.colony_step(prob, st, cfg)          # jitted step
+    st_scan, hist = aco.run_scan(prob, st, cfg, 3)  # fused scan driver
+    assert hist.shape == (3,)
+    assert np.isfinite(float(st_scan.best_len))
+    assert tsp.is_valid_tour(np.asarray(st_scan.best_tour))
+
+
+def test_ls_never_worsens_constructed_tours():
+    """Within the colony step, LS output lengths <= construction lengths."""
+    prob, res = _tours(60, 20, seed=6)
+    cfg = aco.ACOConfig(local_search="2opt", ls_rounds=10)
+    out, lens = aco.polish_tours(prob, res.tours, cfg)
+    assert (np.asarray(lens) <= np.asarray(res.lengths) + 1e-2).all()
+    assert tsp.is_valid_tour(np.asarray(out))
+
+
+def test_unknown_strategy_rejected():
+    prob, res = _tours(16, 2, seed=7)
+    cfg = localsearch.LocalSearchConfig(kind="3opt")
+    with pytest.raises(ValueError, match="unknown local-search"):
+        localsearch.improve(prob.dist, prob.nn, res.tours, cfg)
+
+
+# ---------------------------------------------------------------- acceptance
+def test_mmas_2opt_closes_gap_on_circle256():
+    """Acceptance: MMAS+2opt beats plain MMAS on circle(256) at an equal
+    iteration count, and lands essentially on the optimum."""
+    inst = tsp.circle_instance(256, seed=11)
+    iters, m = 20, 64
+    base = aco.ACOConfig(iterations=iters, variant="mmas",
+                         selection="gumbel", m=m)
+    ls = aco.ACOConfig(iterations=iters, variant="mmas", selection="gumbel",
+                       m=m, local_search="2opt", ls_tours="iteration_best",
+                       ls_rounds=128)
+    st_b = aco.run(inst, base)
+    st_l = aco.run(inst, ls)
+    gap_b = float(st_b.best_len) / inst.known_optimum - 1
+    gap_l = float(st_l.best_len) / inst.known_optimum - 1
+    assert tsp.is_valid_tour(np.asarray(st_l.best_tour))
+    assert gap_l < 0.05, (gap_l, gap_b)
+    assert gap_l < gap_b * 0.5, (gap_l, gap_b)
