@@ -4,8 +4,9 @@ after equal iteration budgets — the sequential reference, the paper's
 parallel designs, and MMAS/AS with and without the batched local search
 (DESIGN.md §7).
 
-Emits ``BENCH_quality.json`` next to the repo root so future PRs have a
-quality/perf trajectory to compare against.
+Emits ``BENCH_quality.json`` at the repo root (path resolved against this
+file, not the cwd, so running from any directory works) so future PRs have
+a quality/perf trajectory to compare against.
 
     PYTHONPATH=src python benchmarks/quality.py [--smoke] [--out PATH]
 """
@@ -17,6 +18,9 @@ import os
 import time
 
 from repro.core import aco, sequential, tsp
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_quality.json")
 
 # (kind, size, iterations); grid size is the side (n = side^2).
 CASES = (("circle", 48, 60), ("circle", 100, 80), ("grid", 8, 60))
@@ -70,7 +74,8 @@ def rows(cases=CASES):
     return out
 
 
-def main(cases=CASES, out_path: str | None = "BENCH_quality.json"):
+def main(cases=CASES, out_path: str | None = None):
+    out_path = out_path or DEFAULT_OUT
     print("quality (gap-to-known-optimum %, equal iteration budget)")
     results = rows(cases)
     hdr = [k for k in results[0] if not k.endswith("_s")]
@@ -97,6 +102,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="single small case (CI)")
-    ap.add_argument("--out", default="BENCH_quality.json")
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON path (default: {DEFAULT_OUT})")
     args = ap.parse_args()
     main(SMOKE_CASES if args.smoke else CASES, args.out)

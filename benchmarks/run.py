@@ -12,7 +12,7 @@ import sys
 import time
 
 from . import (fig4_overall, fig5_pheromone, local_search, quality, roofline,
-               table2_tour_construction, table3_pheromone)
+               solver_throughput, table2_tour_construction, table3_pheromone)
 
 TABLES = {
     "table2": lambda full: table2_tour_construction.main(
@@ -26,6 +26,8 @@ TABLES = {
     "quality": lambda full: quality.main(),
     "local_search": lambda full: local_search.main(
         local_search.FULL_SIZES if full else local_search.SIZES),
+    "solver": lambda full: solver_throughput.main(
+        solver_throughput.CASES if full else solver_throughput.SMOKE_CASES),
     "roofline": lambda full: roofline.main(),
 }
 

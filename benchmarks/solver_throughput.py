@@ -1,0 +1,123 @@
+"""Instance-batched solver throughput: batched vs solve-one-at-a-time.
+
+For each (bucket, batch, iterations) case, a workload of ``batch`` mixed-size
+instances (all landing in one bucket) is solved two ways with the same
+engine, seeds and budgets:
+
+- ``solo``   a Python loop over B single-instance (vmap B=1) engine calls —
+             the baseline a naive deployment would run;
+- ``batched``one vmapped call advancing all B colonies together.
+
+Both paths are compile-warmed before timing, so the table isolates steady-
+state throughput (instances/sec); the batched row's speedup is the gain of
+filling the device with whole colonies (PAPERS.md: a single mid-size
+instance cannot saturate a modern accelerator).
+
+Emits ``BENCH_solver.json`` at the repo root (path resolved against this
+file, so it works from any cwd).
+
+    PYTHONPATH=src python benchmarks/solver_throughput.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+
+from repro.core import aco, tsp
+from repro.solver import batch as batch_mod
+from repro.solver import engine
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_solver.json")
+
+# (bucket, batch, iterations). Buckets >= 64: below that the whole colony
+# step is so small on CPU that per-call overhead, not compute, is measured.
+CASES = ((64, 4, 20), (64, 8, 20), (128, 8, 15))
+SMOKE_CASES = ((64, 4, 8),)
+REPS = 3   # best-of-N timing to damp scheduler noise
+
+
+def _workload(bucket: int, batch: int):
+    """Mixed sizes in (bucket/2, bucket] so every instance pads to bucket."""
+    lo = bucket // 2 + 1
+    sizes = [lo + (i * (bucket - lo)) // max(batch - 1, 1)
+             for i in range(batch)]
+    return [tsp.random_instance(n, seed=100 + i)
+            for i, n in enumerate(sizes)]
+
+
+def _run_solo(instances, cfg, iters, bucket):
+    for i, inst in enumerate(instances):
+        st, _ = engine.solve_instances([inst], cfg, iterations=[iters],
+                                       seeds=[i], n_pad=bucket)
+        st.best_len.block_until_ready()
+
+
+def _run_batched(instances, cfg, iters, bucket):
+    st, _ = engine.solve_instances(instances, cfg,
+                                   iterations=[iters] * len(instances),
+                                   seeds=list(range(len(instances))),
+                                   n_pad=bucket)
+    st.best_len.block_until_ready()
+
+
+def rows(cases=CASES):
+    out = []
+    for bucket, batch, iters in cases:
+        instances = _workload(bucket, batch)
+        cfg = aco.ACOConfig(iterations=iters)
+        # warm both compiled programs (B=1 and B=batch) out of the timing
+        _run_solo(instances, cfg, iters, bucket)
+        _run_batched(instances, cfg, iters, bucket)
+
+        solo_s = batch_s = float("inf")
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            _run_solo(instances, cfg, iters, bucket)
+            solo_s = min(solo_s, time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            _run_batched(instances, cfg, iters, bucket)
+            batch_s = min(batch_s, time.perf_counter() - t0)
+
+        out.append({
+            "bucket": bucket, "batch": batch, "iters": iters,
+            "solo_s": round(solo_s, 4), "batch_s": round(batch_s, 4),
+            "solo_ips": round(batch / solo_s, 3),
+            "batch_ips": round(batch / batch_s, 3),
+            "speedup": round(solo_s / batch_s, 3),
+        })
+    return out
+
+
+def main(cases=CASES, out_path: str | None = None):
+    out_path = out_path or DEFAULT_OUT
+    print("solver throughput (instances/sec, batched vs one-at-a-time)")
+    results = rows(cases)
+    hdr = list(results[0])
+    print(",".join(hdr))
+    for r in results:
+        print(",".join(str(r[k]) for k in hdr))
+    payload = {
+        "benchmark": "solver_throughput",
+        "schema": 1,
+        "unix_time": int(time.time()),
+        "rows": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {os.path.abspath(out_path)}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="single small case")
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON path (default: {DEFAULT_OUT})")
+    args = ap.parse_args()
+    main(SMOKE_CASES if args.smoke else CASES, args.out)

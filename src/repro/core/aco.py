@@ -62,10 +62,17 @@ class ColonyState(NamedTuple):
 
 
 class Problem(NamedTuple):
-    """Device-resident constants for one TSP instance."""
+    """Device-resident constants for one TSP instance.
+
+    ``n_actual`` is None for ordinary instances.  For padded instances
+    (solver/batch.py: phantom cities at inf distance, eta exactly 0) it is
+    the scalar count of real cities — a traced operand, per-instance under
+    vmap — and flips colony_step into mask-aware mode (DESIGN.md §8).
+    """
     dist: Array           # (n, n) float32
     eta: Array            # (n, n) float32  (1/d)
     nn: Array             # (n, k) int32
+    n_actual: Optional[Array] = None   # () int32, or None (unpadded)
 
 
 def make_problem(instance: tsp.TSPInstance, nn_k: int = 30) -> Problem:
@@ -126,10 +133,11 @@ def polish_tours(problem: Problem, tours: Array,
     """Local-search-improve (m, n) tours; returns (tours, lengths).
 
     Shared by colony_step (below) and the island exchange (islands.py),
-    which polishes migrated elite tours before they deposit.
+    which polishes migrated elite tours before they deposit.  Mask-aware
+    when problem.n_actual is set (padded instances).
     """
-    out = localsearch.improve(problem.dist, problem.nn, tours, ls_config(cfg))
-    return out, tsp.tour_length(problem.dist, out)
+    return localsearch.improve_with_lengths(
+        problem.dist, problem.nn, tours, ls_config(cfg), problem.n_actual)
 
 
 def _apply_local_search(problem: Problem, res: strategies.TourResult,
@@ -174,6 +182,11 @@ def colony_step(problem: Problem, state: ColonyState,
     """
     n = problem.dist.shape[0]
     m = cfg.num_ants(n)
+    n_act = problem.n_actual           # None, or traced () int32 (padded)
+    if n_act is not None and cfg.use_pallas:
+        raise NotImplementedError(
+            "use_pallas is not mask-aware yet; padded instances (solver/) "
+            "run the pure-JAX path")
     key, k_tour = jax.random.split(state.key)
 
     choice_info = _choice(state.tau, problem.eta, cfg)
@@ -186,7 +199,7 @@ def colony_step(problem: Problem, state: ColonyState,
         k_tour, problem.dist, choice_info, m,
         method=method, selection=cfg.selection,
         nn=problem.nn, tau=state.tau, eta=problem.eta,
-        alpha=cfg.alpha, beta=cfg.beta,
+        alpha=cfg.alpha, beta=cfg.beta, n_actual=n_act,
     )
 
     if cfg.local_search != "none":
@@ -223,17 +236,27 @@ def colony_step(problem: Problem, state: ColonyState,
         tau = kops.pheromone_update(state.tau, dep_tours, dep_w, cfg.rho)
     else:
         tau = pheromone.update(state.tau, dep_tours, dep_w, cfg.rho,
-                               strategy=cfg.deposit, tile=cfg.deposit_tile)
+                               strategy=cfg.deposit, tile=cfg.deposit_tile,
+                               n_actual=n_act)
 
+    # MMAS/ACS normalisations use the real city count of padded instances.
+    n_eff = n if n_act is None else n_act
     if cfg.variant == "mmas":
         tau_max = cfg.q / (cfg.rho * best_len)
-        tau_min = tau_max / (2.0 * n)
+        tau_min = tau_max / (2.0 * n_eff)
         tau = jnp.clip(tau, tau_min, tau_max)
     elif cfg.variant == "acs":
         # Parallel-ACS local rule: decay edges crossed this iteration.
-        f, t = pheromone.tour_edges(res.tours)
-        tau0 = cfg.q / (n * jnp.maximum(best_len, 1e-9))
-        tau = pheromone.local_update_acs(tau, f.ravel(), t.ravel(), cfg.xi, tau0)
+        f, t = pheromone.tour_edges(res.tours, n_act)
+        tau0 = cfg.q / (n_eff * jnp.maximum(best_len, 1e-9))
+        ew = None
+        if n_act is not None:
+            # phantom-tail crossings must not decay (multiplicity 0)
+            idx = jnp.arange(n, dtype=jnp.int32)
+            ew = jnp.broadcast_to((idx < n_act).astype(tau.dtype),
+                                  res.tours.shape).ravel()
+        tau = pheromone.local_update_acs(tau, f.ravel(), t.ravel(), cfg.xi,
+                                         tau0, w=ew)
 
     new_state = ColonyState(tau, best_tour, best_len,
                             state.iteration + 1, key)

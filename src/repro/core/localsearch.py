@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,11 +76,27 @@ def tour_positions(tours: Array) -> Array:
     return jnp.zeros((m, n), jnp.int32).at[ants, tours].set(steps)
 
 
+def _successors(tours: Array, n_actual: Optional[Array]) -> Array:
+    """succ[ant, p] = city after position p.
+
+    Unmasked this is roll(-1); with ``n_actual`` (padded tours, real prefix
+    at positions [0, n_actual)) the real tour closes at position n_actual-1
+    back to the city at position 0 — phantom-tail successors are garbage and
+    must be masked out by the caller's ``valid`` tensor.
+    """
+    succ = jnp.roll(tours, -1, axis=-1)
+    if n_actual is not None:
+        idx = jnp.arange(tours.shape[-1], dtype=jnp.int32)
+        succ = jnp.where(idx == n_actual - 1, tours[..., :1], succ)
+    return succ
+
+
 # --------------------------------------------------------------------------
 # 2-opt
 # --------------------------------------------------------------------------
 
-def _two_opt_operands(dist: Array, nn: Array, tours: Array):
+def _two_opt_operands(dist: Array, nn: Array, tours: Array,
+                      n_actual: Optional[Array] = None):
     """Gathered distance tensors for all (position, candidate) 2-opt moves.
 
     Returns (add1, add2, rem1, rem2, valid, j) each (m, n, k): the move at
@@ -89,12 +105,13 @@ def _two_opt_operands(dist: Array, nn: Array, tours: Array):
     m, n = tours.shape
     pos = tour_positions(tours)
     a = tours                                        # (m, n)
-    a_nxt = jnp.roll(tours, -1, axis=-1)
+    succ = _successors(tours, n_actual)
+    a_nxt = succ
     c = nn[a]                                        # (m, n, k)
     k = c.shape[-1]
     j = jnp.take_along_axis(pos, c.reshape(m, -1), axis=1).reshape(m, n, k)
     c_nxt = jnp.take_along_axis(
-        tours, ((j + 1) % n).reshape(m, -1), axis=1).reshape(m, n, k)
+        succ, j.reshape(m, -1), axis=1).reshape(m, n, k)
     add1 = dist[a[..., None], c]                     # d(a, c)
     add2 = dist[a_nxt[..., None], c_nxt]             # d(a', c')
     rem1 = jnp.broadcast_to(dist[a, a_nxt][..., None], add1.shape)
@@ -102,6 +119,12 @@ def _two_opt_operands(dist: Array, nn: Array, tours: Array):
     # degenerate moves share an edge with the tour: their true delta is 0,
     # but float cancellation could make it spuriously negative — mask them.
     valid = (c != a_nxt[..., None]) & (c_nxt != a[..., None])
+    if n_actual is not None:
+        # padded instance: anchors must sit in the real prefix and
+        # candidates must be real cities — any phantom-touching move has
+        # inf/NaN operands and is discarded here, before selection.
+        i_pos = jnp.arange(n, dtype=jnp.int32)[None, :, None]
+        valid = valid & (i_pos < n_actual) & (c < n_actual)
     return add1, add2, rem1, rem2, valid, j
 
 
@@ -120,8 +143,10 @@ def _reduce_moves(add1, add2, rem1, rem2, valid, cfg: LocalSearchConfig):
 
 
 def best_two_opt_move(dist: Array, nn: Array, tours: Array,
-                      cfg: LocalSearchConfig) -> Move:
-    add1, add2, rem1, rem2, valid, j = _two_opt_operands(dist, nn, tours)
+                      cfg: LocalSearchConfig,
+                      n_actual: Optional[Array] = None) -> Move:
+    add1, add2, rem1, rem2, valid, j = _two_opt_operands(
+        dist, nn, tours, n_actual)
     m, n, k = j.shape
     val, idx = _reduce_moves(add1, add2, rem1, rem2, valid, cfg)
     safe = jnp.clip(idx, 0, n * k - 1)
@@ -143,8 +168,11 @@ def apply_two_opt(tours: Array, i: Array, j: Array, do: Array) -> Array:
 
 
 def two_opt_round(dist: Array, nn: Array, tours: Array,
-                  cfg: LocalSearchConfig) -> Array:
-    mv = best_two_opt_move(dist, nn, tours, cfg)
+                  cfg: LocalSearchConfig,
+                  n_actual: Optional[Array] = None) -> Array:
+    mv = best_two_opt_move(dist, nn, tours, cfg, n_actual)
+    # masked moves have i, j < n_actual, so the reversal below never
+    # touches the phantom tail of a padded tour.
     return apply_two_opt(tours, mv.i, mv.j, mv.delta < -cfg.min_delta)
 
 
@@ -153,7 +181,8 @@ def two_opt_round(dist: Array, nn: Array, tours: Array,
 # --------------------------------------------------------------------------
 
 def best_or_opt_move(dist: Array, nn: Array, tours: Array, seg_len: int,
-                     cfg: LocalSearchConfig) -> Move:
+                     cfg: LocalSearchConfig,
+                     n_actual: Optional[Array] = None) -> Move:
     """Best relocation of a ``seg_len`` segment, candidates from nn[s0].
 
     Move (ant, p, c): remove the segment s0..s_end at positions
@@ -165,25 +194,42 @@ def best_or_opt_move(dist: Array, nn: Array, tours: Array, seg_len: int,
     pos = tour_positions(tours)
     s0 = tours
     s_end = jnp.roll(tours, -(seg_len - 1), axis=-1)
-    prev = jnp.roll(tours, 1, axis=-1)
-    nxt = jnp.roll(tours, -seg_len, axis=-1)
     c = nn[s0]                                       # (m, n, k)
     k = c.shape[-1]
     q = jnp.take_along_axis(pos, c.reshape(m, -1), axis=1).reshape(m, n, k)
-    c_nxt = jnp.take_along_axis(
-        tours, ((q + 1) % n).reshape(m, -1), axis=1).reshape(m, n, k)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if n_actual is None:
+        prev = jnp.roll(tours, 1, axis=-1)
+        nxt = jnp.roll(tours, -seg_len, axis=-1)
+        c_nxt = jnp.take_along_axis(
+            tours, ((q + 1) % n).reshape(m, -1), axis=1).reshape(m, n, k)
+        n_lim = n
+    else:
+        # padded tour: wrap within the real prefix [0, n_actual) only.
+        succ = _successors(tours, n_actual)
+        prev = jnp.where(idx == 0,
+                         jnp.take_along_axis(
+                             tours, jnp.broadcast_to(n_actual - 1, (m, 1)), 1),
+                         jnp.roll(tours, 1, axis=-1))
+        nxt = jnp.take_along_axis(
+            tours, jnp.broadcast_to((idx + seg_len) % n_actual, (m, n)), 1)
+        c_nxt = jnp.take_along_axis(
+            succ, q.reshape(m, -1), axis=1).reshape(m, n, k)
+        n_lim = n_actual
     delta = (
         dist[prev, nxt][..., None] + dist[s0[..., None], c]
         + dist[s_end[..., None], c_nxt]
         - dist[prev, s0][..., None] - dist[s_end, nxt][..., None]
         - dist[c, c_nxt]
     )
-    p = jnp.arange(n, dtype=jnp.int32)[None, :, None]
+    p = idx[None, :, None]
     in_seg = (q >= p) & (q < p + seg_len)
-    valid = (~in_seg) & (c != prev[..., None]) & (p <= n - seg_len)
-    val, idx = kref.select_move(delta.reshape(m, -1), valid.reshape(m, -1),
-                                thr=cfg.min_delta, mode=cfg.improvement)
-    safe = jnp.clip(idx, 0, n * k - 1)
+    valid = (~in_seg) & (c != prev[..., None]) & (p <= n_lim - seg_len)
+    if n_actual is not None:
+        valid = valid & (c < n_actual)
+    val, idx_sel = kref.select_move(delta.reshape(m, -1), valid.reshape(m, -1),
+                                    thr=cfg.min_delta, mode=cfg.improvement)
+    safe = jnp.clip(idx_sel, 0, n * k - 1)
     p_sel = (safe // k).astype(jnp.int32)
     q_sel = jnp.take_along_axis(q.reshape(m, -1), safe[:, None], axis=1)[:, 0]
     return Move(val, p_sel, q_sel)
@@ -211,9 +257,10 @@ def apply_or_opt(tours: Array, p: Array, q: Array, seg_len: int,
 
 
 def or_opt_round(dist: Array, nn: Array, tours: Array,
-                 cfg: LocalSearchConfig) -> Array:
+                 cfg: LocalSearchConfig,
+                 n_actual: Optional[Array] = None) -> Array:
     for seg_len in range(1, min(cfg.seg_max, tours.shape[1] - 2) + 1):
-        mv = best_or_opt_move(dist, nn, tours, seg_len, cfg)
+        mv = best_or_opt_move(dist, nn, tours, seg_len, cfg, n_actual)
         tours = apply_or_opt(tours, mv.i, mv.j, seg_len,
                              mv.delta < -cfg.min_delta)
     return tours
@@ -223,41 +270,38 @@ def or_opt_round(dist: Array, nn: Array, tours: Array,
 # Driver + registry
 # --------------------------------------------------------------------------
 
-def _round_2opt(dist, nn, tours, cfg):
-    return two_opt_round(dist, nn, tours, cfg)
+def _round_2opt_oropt(dist, nn, tours, cfg, n_actual=None):
+    return or_opt_round(dist, nn, two_opt_round(dist, nn, tours, cfg, n_actual),
+                        cfg, n_actual)
 
 
-def _round_oropt(dist, nn, tours, cfg):
-    return or_opt_round(dist, nn, tours, cfg)
-
-
-def _round_2opt_oropt(dist, nn, tours, cfg):
-    return or_opt_round(dist, nn, two_opt_round(dist, nn, tours, cfg), cfg)
-
-
-def _round_none(dist, nn, tours, cfg):
-    del dist, nn, cfg
+def _round_none(dist, nn, tours, cfg, n_actual=None):
+    del dist, nn, cfg, n_actual
     return tours
 
 
-RoundFn = Callable[[Array, Array, Array, LocalSearchConfig], Array]
+RoundFn = Callable[..., Array]
 
 # name -> one-improvement-round function (mirrors pheromone.STRATEGIES)
 STRATEGIES: dict[str, RoundFn] = {
     "none": _round_none,
-    "2opt": _round_2opt,
-    "oropt": _round_oropt,
+    "2opt": two_opt_round,
+    "oropt": or_opt_round,
     "2opt_oropt": _round_2opt_oropt,
 }
 
 
 def improve(dist: Array, nn: Array, tours: Array,
-            cfg: LocalSearchConfig) -> Array:
+            cfg: LocalSearchConfig,
+            n_actual: Optional[Array] = None) -> Array:
     """Run up to ``cfg.rounds`` improvement rounds on all tours at once.
 
     Never worsens any tour; jit/scan/vmap/shard_map compatible (fixed
     shapes; the only data-dependent control flow is the bounded
     while_loop below, which those transforms all support).
+
+    ``n_actual``: traced real-city count for padded tours (solver/): moves
+    are restricted to the real prefix, the phantom tail is never touched.
     """
     if cfg.kind not in STRATEGIES:
         raise ValueError(
@@ -276,7 +320,7 @@ def improve(dist: Array, nn: Array, tours: Array,
 
     def body(carry):
         t, r, _ = carry
-        t2 = round_fn(dist, nn, t, cfg)
+        t2 = round_fn(dist, nn, t, cfg, n_actual)
         return t2, r + 1, jnp.any(t2 != t)
 
     tours, _, _ = jax.lax.while_loop(
@@ -286,7 +330,9 @@ def improve(dist: Array, nn: Array, tours: Array,
 
 @partial(jax.jit, static_argnames=("cfg",))
 def improve_with_lengths(dist: Array, nn: Array, tours: Array,
-                         cfg: LocalSearchConfig) -> tuple[Array, Array]:
+                         cfg: LocalSearchConfig,
+                         n_actual: Optional[Array] = None
+                         ) -> tuple[Array, Array]:
     """improve() + recomputed closed-tour lengths (one fused program)."""
-    out = improve(dist, nn, tours, cfg)
-    return out, tsp.tour_length(dist, out)
+    out = improve(dist, nn, tours, cfg, n_actual)
+    return out, tsp.tour_length(dist, out, n_actual)

@@ -28,6 +28,7 @@ tests/test_pheromone.py.
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,29 +41,51 @@ def evaporate(tau: Array, rho: float) -> Array:
     return (1.0 - rho) * tau
 
 
-def tour_edges(tours: Array) -> tuple[Array, Array]:
-    """Directed edge endpoints (m, n) for closed tours."""
-    return tours, jnp.roll(tours, -1, axis=-1)
+def tour_edges(tours: Array,
+               n_actual: Optional[Array] = None) -> tuple[Array, Array]:
+    """Directed edge endpoints (m, n) for closed tours.
+
+    With ``n_actual`` (traced scalar; padded instances, DESIGN.md §8) the
+    closing edge wraps at position n_actual-1 back to position 0; the
+    phantom-tail positions still produce (phantom, phantom) index pairs but
+    the masked deposit functions below give them zero weight.
+    """
+    t = jnp.roll(tours, -1, axis=-1)
+    if n_actual is not None:
+        idx = jnp.arange(tours.shape[-1], dtype=jnp.int32)
+        t = jnp.where(idx == n_actual - 1, tours[..., :1], t)
+    return tours, t
 
 
-def deposit_scatter(n: int, tours: Array, w: Array, symmetric: bool = True) -> Array:
-    """Atomic-analogue scatter-add (paper versions 1/2)."""
-    f, t = tour_edges(tours)
+def _edge_weights(tours: Array, w: Array,
+                  n_actual: Optional[Array] = None) -> Array:
+    """(m*n,) per-edge deposit weights; phantom-tail edges masked to 0."""
     ns = tours.shape[-1]
-    wrep = jnp.broadcast_to(w[:, None], (w.shape[0], ns)).ravel()
+    wrep = jnp.broadcast_to(w[:, None], (w.shape[0], ns))
+    if n_actual is not None:
+        idx = jnp.arange(ns, dtype=jnp.int32)
+        wrep = jnp.where(idx[None, :] < n_actual, wrep, 0.0)
+    return wrep.ravel()
+
+
+def deposit_scatter(n: int, tours: Array, w: Array, symmetric: bool = True,
+                    n_actual: Optional[Array] = None) -> Array:
+    """Atomic-analogue scatter-add (paper versions 1/2)."""
+    f, t = tour_edges(tours, n_actual)
+    wrep = _edge_weights(tours, w, n_actual)
     d = jnp.zeros((n, n), jnp.float32).at[f.ravel(), t.ravel()].add(wrep)
     if symmetric:
         d = d + d.T
     return d
 
 
-def deposit_reduction(n: int, tours: Array, w: Array) -> Array:
+def deposit_reduction(n: int, tours: Array, w: Array,
+                      n_actual: Optional[Array] = None) -> Array:
     """Paper's Reduction version: half the scatters via edge canonicalisation."""
-    f, t = tour_edges(tours)
+    f, t = tour_edges(tours, n_actual)
     lo = jnp.minimum(f, t)
     hi = jnp.maximum(f, t)
-    ns = tours.shape[-1]
-    wrep = jnp.broadcast_to(w[:, None], (w.shape[0], ns)).ravel()
+    wrep = _edge_weights(tours, w, n_actual)
     upper = jnp.zeros((n, n), jnp.float32).at[lo.ravel(), hi.ravel()].add(wrep)
     return upper + upper.T
 
@@ -138,11 +161,15 @@ STRATEGIES = ("scatter", "reduction", "s2g", "s2g_tiled", "onehot")
 
 
 def deposit(n: int, tours: Array, w: Array, strategy: str = "scatter",
-            tile: int = 64) -> Array:
+            tile: int = 64, n_actual: Optional[Array] = None) -> Array:
     if strategy == "scatter":
-        return deposit_scatter(n, tours, w)
+        return deposit_scatter(n, tours, w, n_actual=n_actual)
     if strategy == "reduction":
-        return deposit_reduction(n, tours, w)
+        return deposit_reduction(n, tours, w, n_actual=n_actual)
+    if n_actual is not None:
+        raise ValueError(
+            f"deposit strategy {strategy!r} is not mask-aware; padded "
+            "instances (solver/) support 'scatter' and 'reduction'")
     if strategy == "s2g":
         return deposit_s2g(n, tours, w, 0, 0)
     if strategy == "s2g_tiled":
@@ -153,14 +180,15 @@ def deposit(n: int, tours: Array, w: Array, strategy: str = "scatter",
 
 
 def update(tau: Array, tours: Array, w: Array, rho: float,
-           strategy: str = "scatter", tile: int = 64) -> Array:
+           strategy: str = "scatter", tile: int = 64,
+           n_actual: Optional[Array] = None) -> Array:
     """Full pheromone update: evaporation (eq. 2) + deposit (eq. 3/4)."""
     n = tau.shape[0]
-    return evaporate(tau, rho) + deposit(n, tours, w, strategy, tile)
+    return evaporate(tau, rho) + deposit(n, tours, w, strategy, tile, n_actual)
 
 
 def local_update_acs(tau: Array, frm: Array, to: Array, xi: float,
-                     tau0: float) -> Array:
+                     tau0: float, w: Optional[Array] = None) -> Array:
     """ACS local pheromone rule on the just-crossed edges (both directions).
 
     The sequential rule tau <- (1-xi) tau + xi tau0 is applied once per
@@ -170,9 +198,12 @@ def local_update_acs(tau: Array, frm: Array, to: Array, xi: float,
     deterministic scatter-add, then the closed form.  (A scatter-``set``
     with duplicate edge indices — multiple ants crossing the same edge —
     has unspecified winner order and made the result nondeterministic.)
+
+    ``w``: optional per-edge crossing multiplicity (phantom-tail edges of
+    padded tours pass 0 so they contribute no decay); defaults to 1.
     """
     n = tau.shape[0]
-    ones = jnp.ones(frm.shape, tau.dtype)
+    ones = jnp.ones(frm.shape, tau.dtype) if w is None else w.astype(tau.dtype)
     counts = jnp.zeros((n, n), tau.dtype).at[frm, to].add(ones)
     counts = counts + counts.T               # symmetric: both directions
     factor = jnp.power(jnp.asarray(1.0 - xi, tau.dtype), counts)

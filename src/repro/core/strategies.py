@@ -31,7 +31,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from . import sampling
+from . import sampling, tsp
 
 Array = jax.Array
 
@@ -46,9 +46,16 @@ class TourResult(NamedTuple):
     lengths: Array  # (m,) float32 closed-tour lengths
 
 
-def place_ants(key: Array, m: int, n: int) -> Array:
-    """Random initial city per ant (paper: 'ants are randomly placed')."""
-    return jax.random.randint(key, (m,), 0, n, dtype=jnp.int32)
+def place_ants(key: Array, m: int, n: int,
+               n_actual: Optional[Array] = None) -> Array:
+    """Random initial city per ant (paper: 'ants are randomly placed').
+
+    ``n_actual`` (traced scalar) bounds placement to the real cities of a
+    padded instance; the draw is bitwise identical to the unpadded draw for
+    the same key (threefry bits are counter-mode in the ant index).
+    """
+    hi = n if n_actual is None else n_actual
+    return jax.random.randint(key, (m,), 0, hi, dtype=jnp.int32)
 
 
 def _init_state(start: Array, n: int) -> TourState:
@@ -57,12 +64,16 @@ def _init_state(start: Array, n: int) -> TourState:
     return TourState(start, visited)
 
 
-def _finish(start: Array, steps: Array, dist: Array) -> TourResult:
+def _finish(start: Array, steps: Array, dist: Array,
+            n_actual: Optional[Array] = None) -> TourResult:
     """steps (n-1, m) emitted cities -> tours (m, n) + lengths."""
     tours = jnp.concatenate([start[None, :], steps], axis=0).T  # (m, n)
+    tours = tours.astype(jnp.int32)
+    if n_actual is not None:
+        return TourResult(tours, tsp.tour_length(dist, tours, n_actual))
     nxt = jnp.roll(tours, -1, axis=-1)
     lengths = dist[tours, nxt].sum(-1)
-    return TourResult(tours.astype(jnp.int32), lengths)
+    return TourResult(tours, lengths)
 
 
 StepImpl = Callable[[Array, Array, TourState, int, dict], Array]
@@ -144,10 +155,10 @@ for _sel in sampling.SELECTORS:
     _STEPS[("pallas", _sel)] = _make_pallas_step(_sel)
 
 
-@partial(jax.jit, static_argnames=("n", "method", "selection"))
+@partial(jax.jit, static_argnames=("n", "method", "selection", "masked"))
 def _construct(key: Array, choice_info: Array, dist: Array, start: Array,
                extras: dict, n: int, method: str,
-               selection: str) -> TourResult:
+               selection: str, masked: bool = False) -> TourResult:
     step_impl = _STEPS[(method, selection)]
     st0 = _init_state(start, n)
     m = start.shape[0]
@@ -156,11 +167,19 @@ def _construct(key: Array, choice_info: Array, dist: Array, start: Array,
     def body(st: TourState, t: Array):
         k = jax.random.fold_in(key, t)
         nxt = step_impl(k, choice_info, st, t, extras)
+        if masked:
+            # Padded instance: once the real cities are exhausted (phantom
+            # weights are all 0 — eta is 0 there), emit the phantom tail in
+            # fixed index order, so every padded tour is the real-city
+            # permutation at positions [0, n_actual) followed by cities
+            # n_actual..n-1.  This invariant is what makes masked
+            # tour-length, deposit and local search exact (DESIGN.md §8).
+            nxt = jnp.where(t < extras["n_actual"], nxt, t).astype(jnp.int32)
         visited = st.visited.at[ants, nxt].set(True)
         return TourState(nxt, visited), nxt
 
     _, steps = jax.lax.scan(body, st0, jnp.arange(1, n))
-    return _finish(start, steps, dist)
+    return _finish(start, steps, dist, extras["n_actual"] if masked else None)
 
 
 def construct_tours(
@@ -176,6 +195,7 @@ def construct_tours(
     alpha: float = 1.0,
     beta: float = 2.0,
     step_impl: Optional[StepImpl] = None,
+    n_actual: Optional[Array] = None,
 ) -> TourResult:
     """Build m complete tours under the given strategy.
 
@@ -184,10 +204,15 @@ def construct_tours(
     ``step_impl``: pass the string "pallas" via method, or a custom StepImpl
     (custom callables bypass the jit cache — fine inside an outer jit like
     aco.colony_step, slow if called repeatedly in eager mode).
+    ``n_actual``: traced scalar count of real cities for padded instances
+    (solver/); ant placement and selection are restricted to real cities and
+    the phantom tail is emitted in fixed order. Returned lengths are masked
+    real-tour lengths. Not supported for step_impl injection.
     """
     n = dist.shape[0]
+    masked = n_actual is not None
     kp, kc = jax.random.split(key)
-    start = place_ants(kp, m, n)
+    start = place_ants(kp, m, n, n_actual)
     zero = jnp.zeros((1, 1), jnp.float32)
     extras = {
         "tau": tau if tau is not None else zero,
@@ -195,8 +220,11 @@ def construct_tours(
         "alpha": jnp.float32(alpha),
         "beta": jnp.float32(beta),
         "nn": nn if nn is not None else jnp.zeros((1, 1), jnp.int32),
+        "n_actual": (jnp.asarray(n_actual, jnp.int32) if masked
+                     else jnp.asarray(n, jnp.int32)),
     }
     if step_impl is not None:
+        assert not masked, "n_actual is not supported with step_impl injection"
         # custom injection path (un-cached trace)
         def _custom(key_, ci_, dist_, start_, extras_):
             st0 = _init_state(start_, n)
@@ -219,7 +247,7 @@ def construct_tours(
     if method == "nn_list":
         assert nn is not None
     return _construct(kc, choice_info, dist, start, extras, n, method,
-                      selection)
+                      selection, masked)
 
 
 def choice_matrix(tau: Array, eta: Array, alpha: float, beta: float) -> Array:

@@ -99,12 +99,19 @@ def grid_instance(side: int) -> TSPInstance:
     )
 
 
+SUPPORTED_EDGE_WEIGHT_TYPES = ("EUC_2D", "CEIL_2D", "ATT")
+
+
 def parse_tsplib(text: str, name: str = "tsplib") -> TSPInstance:
     """Minimal TSPLIB .tsp parser (NODE_COORD_SECTION, EUC_2D/ATT/CEIL_2D)."""
     ewt = "EUC_2D"
     m = re.search(r"EDGE_WEIGHT_TYPE\s*:\s*(\w+)", text)
     if m:
         ewt = m.group(1)
+    if ewt not in SUPPORTED_EDGE_WEIGHT_TYPES:
+        raise ValueError(
+            f"unsupported EDGE_WEIGHT_TYPE {ewt!r}; "
+            f"supported: {', '.join(SUPPORTED_EDGE_WEIGHT_TYPES)}")
     nm = re.search(r"NAME\s*:\s*(\S+)", text)
     if nm:
         name = nm.group(1)
@@ -126,6 +133,29 @@ def parse_tsplib(text: str, name: str = "tsplib") -> TSPInstance:
     return TSPInstance(name=name, coords=np.asarray(coords), edge_weight_type=ewt)
 
 
+def pad_instance(instance: TSPInstance, n_pad: int) -> TSPInstance:
+    """Pad an instance to ``n_pad`` cities with masked phantom cities.
+
+    Phantom cities (indices >= instance.n) sit at infinite distance from
+    every real city and from each other (diagonal stays 0), so their
+    heuristic eta = 1/d is exactly 0 and no masked code path can ever
+    prefer them.  The solver engine (solver/batch.py) buckets instances by
+    padded size so one vmapped program serves many heterogeneous instances;
+    DESIGN.md §8 records the masking invariants.
+    """
+    n = instance.n
+    if n_pad < n:
+        raise ValueError(f"n_pad={n_pad} < instance size {n}")
+    if n_pad == n:
+        return instance
+    d = np.full((n_pad, n_pad), np.inf, dtype=np.float32)
+    d[:n, :n] = instance.distances()
+    np.fill_diagonal(d, 0.0)
+    return TSPInstance(name=instance.name, dist_matrix=d,
+                       edge_weight_type=instance.edge_weight_type,
+                       known_optimum=instance.known_optimum)
+
+
 def nn_lists(dist: Array, k: int) -> Array:
     """(n, k) int32 nearest-neighbour lists, self excluded (paper §II, nn=15..40)."""
     n = dist.shape[0]
@@ -134,12 +164,24 @@ def nn_lists(dist: Array, k: int) -> Array:
     return idx.astype(jnp.int32)
 
 
-def tour_length(dist: Array, tour: Array) -> Array:
-    """Closed-tour length; tour (..., n) int32 city permutation."""
+def tour_length(dist: Array, tour: Array, n_actual: Optional[Array] = None) -> Array:
+    """Closed-tour length; tour (..., n) int32 city permutation.
+
+    With ``n_actual`` (a traced scalar, per-instance under vmap) the tour is
+    treated as a padded tour whose real cities occupy positions
+    ``0..n_actual-1``: the closing edge runs from position n_actual-1 back to
+    position 0 and phantom-tail edges contribute 0 (masked with ``where``,
+    never multiplied — phantom distances are inf).
+    """
     nxt = jnp.roll(tour, -1, axis=-1)
-    return jnp.take_along_axis(
-        dist[tour], nxt[..., None], axis=-1
-    )[..., 0].sum(-1)
+    if n_actual is None:
+        return jnp.take_along_axis(
+            dist[tour], nxt[..., None], axis=-1
+        )[..., 0].sum(-1)
+    idx = jnp.arange(tour.shape[-1], dtype=jnp.int32)
+    nxt = jnp.where(idx == n_actual - 1, tour[..., :1], nxt)
+    d = jnp.take_along_axis(dist[tour], nxt[..., None], axis=-1)[..., 0]
+    return jnp.where(idx < n_actual, d, 0.0).sum(-1)
 
 
 def heuristic_matrix(dist: Array) -> Array:

@@ -1,0 +1,78 @@
+"""Batched TSP solver serving driver (mirrors launch/serve.py for the LM).
+
+Generates a mixed workload of synthetic instances, submits them to the
+SolverService queue, runs the bucket scheduler, and prints JSON stats.
+
+CPU-scale usage:
+    PYTHONPATH=src python -m repro.launch.solve_serve \
+        --num-instances 8 --min-n 12 --max-n 48 --iterations 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import aco, tsp
+from repro.solver import SolverService
+
+
+def make_workload(num: int, min_n: int, max_n: int, seed: int):
+    """Alternating random/circle instances with sizes across the range
+    (circle instances carry a known optimum, so the service reports gaps)."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(num):
+        n = int(rng.randint(min_n, max_n + 1))
+        if i % 2 == 0:
+            out.append(tsp.circle_instance(n, seed=seed + i))
+        else:
+            out.append(tsp.random_instance(n, seed=seed + i))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--num-instances", type=int, default=8)
+    ap.add_argument("--min-n", type=int, default=12)
+    ap.add_argument("--max-n", type=int, default=48)
+    ap.add_argument("--iterations", type=int, default=20)
+    ap.add_argument("--variant", default="as", choices=["as", "mmas", "acs"])
+    ap.add_argument("--selection", default="iroulette")
+    ap.add_argument("--local-search", default="none")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--min-bucket", type=int, default=16)
+    ap.add_argument("--patience", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
+                        selection=args.selection,
+                        local_search=args.local_search, seed=args.seed)
+    svc = SolverService(cfg, max_batch=args.max_batch,
+                        min_bucket=args.min_bucket, patience=args.patience,
+                        checkpoint_dir=args.checkpoint_dir)
+    for inst in make_workload(args.num_instances, args.min_n, args.max_n,
+                              args.seed):
+        svc.submit(inst)
+    results = svc.run()
+
+    gaps = [r.gap_pct for r in results if r.gap_pct is not None]
+    print(json.dumps({
+        "results": [
+            {"id": r.request_id, "name": r.name, "n": r.n,
+             "bucket": r.bucket, "best_len": round(r.best_len, 2),
+             "iterations": r.iterations,
+             "gap_pct": None if r.gap_pct is None else round(r.gap_pct, 2)}
+            for r in results
+        ],
+        "mean_gap_pct": round(float(np.mean(gaps)), 2) if gaps else None,
+        "stats": {k: (round(v, 4) if isinstance(v, float) else v)
+                  for k, v in svc.stats.items()},
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

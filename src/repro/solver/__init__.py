@@ -1,0 +1,16 @@
+"""Instance-batched solver: pad/bucket/vmap many TSP instances per device.
+
+- batch.py    pads instances to power-of-two bucket sizes with masked
+              phantom cities and stacks them into a ProblemBatch;
+- engine.py   vmaps core.aco.colony_step over the instance axis so one
+              jitted call advances B colonies, with per-instance budgets
+              and a done-mask early exit;
+- service.py  a queue-and-scheduler request loop with throughput stats
+              and supervisor/checkpoint crash recovery.
+
+See DESIGN.md §8 for the bucketing policy and masking invariants.
+"""
+from .batch import (ProblemBatch, bucket_size, make_batch,  # noqa: F401
+                    padded_problem)
+from .engine import init_states, run_batch, solve_instances  # noqa: F401
+from .service import SolveResult, SolverService  # noqa: F401

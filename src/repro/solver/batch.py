@@ -1,0 +1,92 @@
+"""Pad/bucket/stack: turn heterogeneous TSP instances into one ProblemBatch.
+
+Bucketing policy (DESIGN.md §8): instances are padded to the next
+power-of-two city count >= ``min_bucket`` so the engine compiles one program
+per (bucket, batch-size, config) triple instead of one per instance size —
+at most log2(n_max) buckets ever exist, and the padding waste is bounded by
+2x cities (4x choice-matrix area) in the worst case.
+
+Masking invariants for a padded instance with ``n_actual`` real cities in an
+``n_pad`` bucket:
+
+- phantom cities (indices >= n_actual) sit at **inf distance** from
+  everything, so eta = 1/d is **exactly 0** and no selection rule can prefer
+  them while a real city remains unvisited;
+- every constructed tour is the real-city permutation at positions
+  [0, n_actual) followed by the phantom tail n_actual..n_pad-1 in fixed
+  index order (strategies._construct emits it deterministically);
+- tour lengths, pheromone deposits and local-search moves are computed with
+  the closing edge at position n_actual-1 -> position 0 and phantom
+  positions masked (never multiplied against inf — always ``where``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aco, tsp
+
+
+def bucket_size(n: int, min_bucket: int = 16) -> int:
+    """Next power-of-two >= max(n, min_bucket)."""
+    if n < 1:
+        raise ValueError(f"instance size {n} < 1")
+    b = min_bucket
+    while b < n:
+        b <<= 1
+    return b
+
+
+def padded_problem(instance: tsp.TSPInstance, n_pad: int,
+                   nn_k: int = 30) -> aco.Problem:
+    """Mask-aware Problem for one instance padded to ``n_pad`` cities."""
+    padded = tsp.pad_instance(instance, n_pad)
+    dist = jnp.asarray(padded.distances())
+    eta = tsp.heuristic_matrix(dist)     # 1/inf == 0 at phantom entries
+    nn = tsp.nn_lists(dist, min(nn_k, n_pad - 1))
+    return aco.Problem(dist, eta, nn,
+                       n_actual=jnp.asarray(instance.n, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemBatch:
+    """B instances padded to one bucket, stacked for the vmapped engine."""
+    problem: aco.Problem              # leaves (B, ...); n_actual (B,)
+    instances: tuple[tsp.TSPInstance, ...]
+    n_pad: int
+
+    @property
+    def size(self) -> int:
+        return len(self.instances)
+
+
+def make_batch(instances, n_pad: int | None = None, nn_k: int = 30,
+               min_bucket: int = 16) -> ProblemBatch:
+    """Pad every instance to a common bucket and stack into one Problem.
+
+    ``n_pad`` defaults to the bucket covering the largest instance.
+    """
+    instances = tuple(instances)
+    if not instances:
+        raise ValueError("empty batch")
+    if n_pad is None:
+        n_pad = bucket_size(max(i.n for i in instances), min_bucket)
+    problems = [padded_problem(i, n_pad, nn_k) for i in instances]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *problems)
+    return ProblemBatch(problem=stacked, instances=instances, n_pad=n_pad)
+
+
+def group_by_bucket(sizes, min_bucket: int = 16) -> dict[int, list[int]]:
+    """index lists of ``sizes`` grouped by their bucket (scheduler helper)."""
+    out: dict[int, list[int]] = {}
+    for i, n in enumerate(sizes):
+        out.setdefault(bucket_size(n, min_bucket), []).append(i)
+    return out
+
+
+def trim_tour(tour, n_actual: int) -> np.ndarray:
+    """Drop the phantom tail of a padded tour -> real-city permutation."""
+    return np.asarray(tour)[:n_actual]

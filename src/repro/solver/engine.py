@@ -1,0 +1,135 @@
+"""Batched multi-instance ACO engine: one jitted call advances B colonies.
+
+``run_batch`` vmaps ``core.aco.colony_step`` over the instance axis inside a
+``lax.while_loop``: every loop iteration advances all still-active colonies
+by one ACO iteration; colonies whose per-instance budget is exhausted (or
+which stagnated past ``patience`` iterations without improvement) are frozen
+with a ``where``-merge, so their trajectory — including the RNG key — is
+bitwise independent of how long the rest of the batch keeps running.  The
+loop exits as soon as every instance is done, not at max(budgets), so a
+batch of mixed budgets costs max(active) iterations, not B * max.
+
+Batch-composition independence (tested in tests/test_solver.py): solving an
+instance inside a batch of B yields *exactly* the same best tour and length
+as solving it alone through the same engine with the same seed, because
+per-slice numerics of the vmapped step match the B=1 program and the freeze
+mask keys off each instance's own absolute iteration counter.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aco, tsp
+
+from . import batch as batch_mod
+
+Array = jax.Array
+
+
+def init_states(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
+                seeds: Sequence[int], n_pad: int) -> aco.ColonyState:
+    """Stacked ColonyState for a bucket: tau0 from each *real* instance."""
+    states = []
+    for inst, seed in zip(instances, seeds):
+        tau0 = aco.initial_tau(inst, cfg)
+        states.append(aco.ColonyState(
+            tau=jnp.full((n_pad, n_pad), tau0, jnp.float32),
+            best_tour=jnp.arange(n_pad, dtype=jnp.int32),
+            best_len=jnp.asarray(np.float32(np.inf)),
+            iteration=jnp.asarray(0, jnp.int32),
+            key=jax.random.PRNGKey(seed),
+        ))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_iters", "patience"))
+def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
+              cfg: aco.ACOConfig, max_iters: int, patience: int = 0,
+              since: Optional[Array] = None
+              ) -> tuple[aco.ColonyState, Array]:
+    """Advance B colonies by up to ``max_iters`` more iterations each.
+
+    budgets: (B,) int32 *absolute* per-instance iteration targets, compared
+    against ColonyState.iteration — so chunked calls (the checkpointing
+    service) compose exactly with one long call.
+    patience: static; >0 additionally stops an instance after that many
+    consecutive non-improving iterations.
+    since: (B,) int32 consecutive-non-improving counters from a previous
+    chunk (defaults to zero); returned updated so chunked patience runs
+    compose exactly — the service checkpoints it next to the ColonyState.
+    """
+    step = jax.vmap(lambda p, s: aco.colony_step(p, s, cfg)[0])
+
+    def done_mask(st: aco.ColonyState, since: Array) -> Array:
+        d = st.iteration >= budgets
+        if patience > 0:
+            d = d | (since >= patience)
+        return d
+
+    def cond(carry):
+        st, since, it = carry
+        return (it < max_iters) & ~jnp.all(done_mask(st, since))
+
+    def body(carry):
+        st, since, it = carry
+        new = step(problem, st)
+        active = ~done_mask(st, since)
+
+        def sel(nl, ol):
+            a = active.reshape(active.shape + (1,) * (nl.ndim - 1))
+            return jnp.where(a, nl, ol)
+
+        merged = jax.tree.map(sel, new, st)
+        improved = new.best_len < st.best_len
+        since = jnp.where(active, jnp.where(improved, 0, since + 1), since)
+        return merged, since, it + 1
+
+    if since is None:
+        since = jnp.zeros_like(budgets)
+    states, since, _ = jax.lax.while_loop(
+        cond, body, (states, since, jnp.int32(0)))
+    return states, since
+
+
+def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
+                    iterations: Optional[Sequence[int]] = None,
+                    seeds: Optional[Sequence[int]] = None,
+                    n_pad: Optional[int] = None, patience: int = 0,
+                    nn_k: Optional[int] = None
+                    ) -> tuple[aco.ColonyState, batch_mod.ProblemBatch]:
+    """Convenience one-shot: batch, init, run. All instances in one bucket."""
+    instances = tuple(instances)
+    its = list(iterations) if iterations is not None else \
+        [cfg.iterations] * len(instances)
+    sds = list(seeds) if seeds is not None else \
+        [cfg.seed + i for i in range(len(instances))]
+    b = batch_mod.make_batch(instances, n_pad,
+                             nn_k if nn_k is not None else cfg.nn_k)
+    states = init_states(instances, cfg, sds, b.n_pad)
+    budgets = jnp.asarray(its, jnp.int32)
+    states, _ = run_batch(b.problem, states, budgets, cfg, int(max(its)),
+                          patience)
+    return states, b
+
+
+def collect(states: aco.ColonyState, b: batch_mod.ProblemBatch) -> list[dict]:
+    """Host-side per-instance results with phantom tails trimmed."""
+    lens = np.asarray(states.best_len)
+    its = np.asarray(states.iteration)
+    tours = np.asarray(states.best_tour)
+    out = []
+    for i, inst in enumerate(b.instances):
+        out.append({
+            "name": inst.name,
+            "n": inst.n,
+            "best_len": float(lens[i]),
+            "best_tour": batch_mod.trim_tour(tours[i], inst.n),
+            "iterations": int(its[i]),
+            "known_optimum": inst.known_optimum,
+        })
+    return out

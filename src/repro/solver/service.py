@@ -1,0 +1,188 @@
+"""Queue-and-scheduler solver service: submit -> bucket -> batch -> collect.
+
+The service accumulates solve requests, groups them by padded bucket size
+(batch.bucket_size), slices each bucket into batches of at most
+``max_batch`` instances, and runs each batch through the vmapped engine.
+One compiled program per (bucket, batch-size, config) serves every request
+that ever lands in that bucket.
+
+Crash recovery: with ``checkpoint_dir`` set, each batch job runs under the
+runtime Supervisor — the job advances in ``ckpt_chunk``-iteration chunks,
+checkpointing the stacked ColonyState after each chunk; on any failure the
+supervisor restores the newest checkpoint and resumes.  Because run_batch
+freezes instances against their *absolute* iteration counter, the chunked
+trajectory is identical to an uninterrupted run (tests/test_solver.py
+injects a crash and asserts result equality).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import aco, tsp
+from repro.runtime.supervisor import Supervisor, SupervisorConfig
+
+from . import batch as batch_mod
+from . import engine
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    request_id: int
+    instance: tsp.TSPInstance
+    iterations: int
+    seed: int
+    submitted_at: float
+
+
+@dataclasses.dataclass
+class SolveResult:
+    request_id: int
+    name: str
+    n: int
+    bucket: int
+    best_len: float
+    best_tour: np.ndarray          # (n,) real-city permutation (tail trimmed)
+    iterations: int
+    gap_pct: Optional[float]       # vs known optimum, when available
+    latency_s: float               # submit -> result
+    solve_s: float                 # batch wall time (shared by batch peers)
+
+
+class SolverService:
+    """Bucket-scheduling request loop over the batched engine."""
+
+    def __init__(self, cfg: Optional[aco.ACOConfig] = None,
+                 max_batch: int = 8, min_bucket: int = 16,
+                 patience: int = 0,
+                 checkpoint_dir: Optional[str] = None,
+                 ckpt_chunk: int = 25):
+        if cfg is None:
+            cfg = aco.ACOConfig()
+        if cfg.use_pallas:
+            raise ValueError("SolverService requires use_pallas=False "
+                             "(padded instances run the pure-JAX path)")
+        if cfg.deposit not in ("scatter", "reduction"):
+            raise ValueError(
+                f"deposit {cfg.deposit!r} is not mask-aware; the solver "
+                "supports 'scatter' and 'reduction'")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.patience = patience
+        self.checkpoint_dir = checkpoint_dir
+        self.ckpt_chunk = ckpt_chunk
+        self._queue: list[SolveRequest] = []
+        self._next_id = 0
+        self._jobs_run = 0
+        self.stats: dict = {}
+
+    # ------------------------------------------------------------- queue
+    def submit(self, instance: tsp.TSPInstance,
+               iterations: Optional[int] = None,
+               seed: Optional[int] = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(SolveRequest(
+            request_id=rid, instance=instance,
+            iterations=iterations if iterations is not None
+            else self.cfg.iterations,
+            seed=seed if seed is not None else self.cfg.seed + rid,
+            submitted_at=time.perf_counter()))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # --------------------------------------------------------- scheduler
+    def run(self) -> list[SolveResult]:
+        """Drain the queue: bucket, batch, solve, collect. Returns results
+        in request order; throughput/latency stats land in self.stats."""
+        queue, self._queue = self._queue, []
+        if not queue:
+            return []
+        t0 = time.perf_counter()
+        by_bucket: dict[int, list[SolveRequest]] = {}
+        for req in queue:
+            b = batch_mod.bucket_size(req.instance.n, self.min_bucket)
+            by_bucket.setdefault(b, []).append(req)
+
+        results: list[SolveResult] = []
+        batch_count = 0
+        for bucket in sorted(by_bucket):
+            reqs = by_bucket[bucket]
+            for i in range(0, len(reqs), self.max_batch):
+                results.extend(self._run_job(bucket, reqs[i:i + self.max_batch]))
+                batch_count += 1
+        wall = time.perf_counter() - t0
+        lat = [r.latency_s for r in results]
+        self.stats = {
+            "requests": len(queue),
+            "batches": batch_count,
+            "buckets": {str(b): len(rs) for b, rs in sorted(by_bucket.items())},
+            "wall_s": wall,
+            "instances_per_s": len(queue) / max(wall, 1e-9),
+            "latency_mean_s": float(np.mean(lat)),
+            "latency_max_s": float(np.max(lat)),
+        }
+        return sorted(results, key=lambda r: r.request_id)
+
+    # --------------------------------------------------------------- job
+    def _run_job(self, bucket: int,
+                 reqs: list[SolveRequest]) -> list[SolveResult]:
+        instances = [r.instance for r in reqs]
+        seeds = [r.seed for r in reqs]
+        budgets_list = [r.iterations for r in reqs]
+        max_it = max(budgets_list)
+        job_id = self._jobs_run
+        self._jobs_run += 1
+
+        b = batch_mod.make_batch(instances, bucket, self.cfg.nn_k)
+        budgets = jnp.asarray(budgets_list, jnp.int32)
+        init = lambda: engine.init_states(instances, self.cfg, seeds, bucket)
+
+        t0 = time.perf_counter()
+        if self.checkpoint_dir:
+            # checkpointed state = (ColonyState, stagnation counters): the
+            # counters must survive chunk boundaries for patience runs to
+            # compose exactly with an uninterrupted one.
+            chunk = self.ckpt_chunk
+            mgr = CheckpointManager(
+                os.path.join(self.checkpoint_dir,
+                             f"job{job_id:04d}_b{bucket}"),
+                async_write=False)
+            sup = Supervisor(
+                SupervisorConfig(total_steps=math.ceil(max_it / chunk),
+                                 ckpt_every=1),
+                mgr,
+                lambda: (init(), jnp.zeros_like(budgets)),
+                lambda st, i: engine.run_batch(
+                    b.problem, st[0], budgets, self.cfg, chunk,
+                    self.patience, st[1]))
+            states, _ = sup.run()
+        else:
+            states, _ = engine.run_batch(b.problem, init(), budgets,
+                                         self.cfg, max_it, self.patience)
+        states.best_len.block_until_ready()
+        solve_s = time.perf_counter() - t0
+
+        now = time.perf_counter()
+        out = []
+        for req, row in zip(reqs, engine.collect(states, b)):
+            opt = row["known_optimum"]
+            out.append(SolveResult(
+                request_id=req.request_id, name=row["name"], n=row["n"],
+                bucket=bucket, best_len=row["best_len"],
+                best_tour=row["best_tour"], iterations=row["iterations"],
+                gap_pct=(100.0 * (row["best_len"] / opt - 1.0)
+                         if opt else None),
+                latency_s=now - req.submitted_at, solve_s=solve_s))
+        return out

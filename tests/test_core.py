@@ -63,6 +63,40 @@ EOF
     assert inst.distances()[0, 1] == 5.0
 
 
+def _tsplib_text(ewt: str, coords=((0.0, 0.0), (3.0, 4.0), (10.0, 11.0))) -> str:
+    rows = "\n".join(f"{i + 1} {x} {y}" for i, (x, y) in enumerate(coords))
+    return (f"NAME : toy\nEDGE_WEIGHT_TYPE : {ewt}\n"
+            f"NODE_COORD_SECTION\n{rows}\nEOF\n")
+
+
+def test_parse_tsplib_att_pseudo_euclidean():
+    inst = tsp.parse_tsplib(_tsplib_text("ATT"))
+    assert inst.edge_weight_type == "ATT"
+    d = inst.distances()
+    # rij = sqrt(25/10) = 1.5811; tij = round = 2 >= rij -> 2 (no bump)
+    assert d[0, 1] == 2.0
+    # (7, 7): rij = sqrt(98/10) = 3.1305; tij = 3 < rij -> 3 + 1 = 4
+    assert d[1, 2] == 4.0
+    assert np.allclose(d, d.T) and (np.diag(d) == 0).all()
+
+
+def test_parse_tsplib_ceil_2d_rounding():
+    coords = ((0.0, 0.0), (3.0, 4.0), (10.0, 0.0))
+    d = tsp.parse_tsplib(_tsplib_text("CEIL_2D", coords)).distances()
+    euc = tsp.parse_tsplib(_tsplib_text("EUC_2D", coords)).distances()
+    assert d[0, 1] == 5.0 and euc[0, 1] == 5.0   # exact distances agree
+    # sqrt(65) = 8.062: CEIL_2D rounds up to 9, EUC_2D nint gives 8
+    assert d[1, 2] == 9.0
+    assert euc[1, 2] == 8.0
+
+
+def test_parse_tsplib_rejects_unsupported_edge_weight_type():
+    with pytest.raises(ValueError, match="unsupported EDGE_WEIGHT_TYPE"):
+        tsp.parse_tsplib(_tsplib_text("GEO"))
+    with pytest.raises(ValueError, match="EXPLICIT"):
+        tsp.parse_tsplib(_tsplib_text("EXPLICIT"))
+
+
 # ------------------------------------------------------------- construction
 @pytest.mark.parametrize("method", ["data_parallel", "task_choice",
                                     "task_baseline", "nn_list"])

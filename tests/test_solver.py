@@ -1,0 +1,211 @@
+"""Instance-batched solver tests: padding/masking invariants, exact
+batch-composition independence (the subsystem's core guarantee), bucket
+scheduling, and supervisor/checkpoint crash recovery."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aco, strategies, tsp
+from repro.solver import batch as batch_mod
+from repro.solver import engine, service
+
+INSTS = (tsp.random_instance(10, seed=1), tsp.circle_instance(12, seed=2),
+         tsp.random_instance(13, seed=3), tsp.circle_instance(16, seed=4))
+SEEDS = (5, 6, 7, 8)
+BUDGETS = (6, 5, 6, 4)
+
+
+# ---------------------------------------------------------------- batching
+def test_bucket_size_policy():
+    assert batch_mod.bucket_size(3) == 16          # min_bucket floor
+    assert batch_mod.bucket_size(16) == 16
+    assert batch_mod.bucket_size(17) == 32
+    assert batch_mod.bucket_size(100) == 128
+    assert batch_mod.bucket_size(5, min_bucket=4) == 8
+    with pytest.raises(ValueError):
+        batch_mod.bucket_size(0)
+
+
+def test_pad_instance_masking():
+    inst = tsp.random_instance(10, seed=0)
+    padded = tsp.pad_instance(inst, 16)
+    d = padded.distances()
+    assert d.shape == (16, 16)
+    np.testing.assert_array_equal(d[:10, :10], inst.distances())
+    assert np.isinf(d[:10, 10:]).all() and np.isinf(d[10:, :10]).all()
+    assert (np.diag(d) == 0).all()
+    # same-size padding is the identity
+    assert tsp.pad_instance(inst, 10) is inst
+    with pytest.raises(ValueError):
+        tsp.pad_instance(inst, 8)
+
+
+def test_padded_problem_eta_and_nn():
+    inst = tsp.random_instance(10, seed=0)
+    prob = batch_mod.padded_problem(inst, 16, nn_k=8)
+    eta = np.asarray(prob.eta)
+    assert (eta[:10, 10:] == 0).all() and (eta[10:, :10] == 0).all()
+    # real rows list all 8 nearest among real cities first (10 - 1 > 8)
+    nn = np.asarray(prob.nn)
+    assert (nn[:10] < 10).all()
+    assert int(prob.n_actual) == 10
+
+
+def test_masked_construction_tours_and_lengths():
+    inst = tsp.random_instance(13, seed=5)
+    n_pad = 16
+    prob = batch_mod.padded_problem(inst, n_pad, nn_k=8)
+    tau = jnp.ones((n_pad, n_pad))
+    ci = strategies.choice_matrix(tau, prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(
+        jax.random.PRNGKey(0), prob.dist, ci, 6,
+        nn=prob.nn, n_actual=prob.n_actual)
+    tours = np.asarray(res.tours)
+    assert tsp.is_valid_tour(tours)                       # perm of n_pad
+    # real prefix is a permutation of the real cities; tail is fixed order
+    assert (np.sort(tours[:, :13], axis=1) == np.arange(13)).all()
+    np.testing.assert_array_equal(tours[:, 13:],
+                                  np.tile(np.arange(13, 16), (6, 1)))
+    # masked lengths equal the numpy closed real-tour lengths
+    d = inst.distances()
+    for k in range(6):
+        t = tours[k, :13]
+        np.testing.assert_allclose(
+            res.lengths[k], d[t, np.roll(t, -1)].sum(), rtol=1e-5)
+
+
+# ------------------------------------------------------------------ engine
+def test_engine_anchor_exact_when_unpadded():
+    """n_actual == n_pad: the mask-aware engine reduces exactly to aco.run."""
+    inst = tsp.circle_instance(16, seed=3)
+    cfg = aco.ACOConfig(iterations=6, seed=11)
+    st_plain = aco.run(inst, cfg)
+    states, b = engine.solve_instances([inst], cfg, seeds=[cfg.seed],
+                                       n_pad=16)
+    row = engine.collect(states, b)[0]
+    assert float(st_plain.best_len) == row["best_len"]
+    np.testing.assert_array_equal(np.asarray(st_plain.best_tour),
+                                  row["best_tour"])
+
+
+@pytest.mark.parametrize("variant,ls", [
+    ("as", "none"), ("mmas", "none"), ("acs", "none"),
+    ("as", "2opt"), ("mmas", "2opt_oropt"), ("acs", "2opt"),
+])
+def test_padding_equivalence_batched_vs_alone(variant, ls):
+    """Acceptance: an instance solved inside a padded batch gets exactly the
+    best tour length it gets when solved alone with the same seed."""
+    cfg = aco.ACOConfig(iterations=max(BUDGETS), variant=variant,
+                        selection="gumbel", local_search=ls, ls_rounds=4)
+    stb, _ = engine.solve_instances(INSTS, cfg, iterations=BUDGETS,
+                                    seeds=SEEDS, n_pad=16)
+    batch_lens = np.asarray(stb.best_len)
+    batch_tours = np.asarray(stb.best_tour)
+    for i, inst in enumerate(INSTS):
+        st1, _ = engine.solve_instances(
+            [inst], cfg, iterations=[BUDGETS[i]], seeds=[SEEDS[i]], n_pad=16)
+        assert float(np.asarray(st1.best_len)[0]) == batch_lens[i], (
+            inst.name, variant, ls)
+        np.testing.assert_array_equal(np.asarray(st1.best_tour)[0],
+                                      batch_tours[i])
+        # the result is a valid real-city tour with matching length
+        real = batch_tours[i][:inst.n]
+        assert tsp.is_valid_tour(real)
+        d = inst.distances()
+        np.testing.assert_allclose(
+            batch_lens[i], d[real, np.roll(real, -1)].sum(), rtol=1e-5)
+
+
+def test_per_instance_budgets_and_freeze():
+    cfg = aco.ACOConfig(iterations=8, selection="gumbel")
+    states, _ = engine.solve_instances(INSTS, cfg, iterations=(2, 8, 4, 1),
+                                       seeds=SEEDS, n_pad=16)
+    np.testing.assert_array_equal(np.asarray(states.iteration), [2, 8, 4, 1])
+
+
+def test_masked_local_search_improves_and_preserves_tail():
+    inst = tsp.circle_instance(24, seed=9)
+    prob = batch_mod.padded_problem(inst, 32, nn_k=10)
+    cfg = aco.ACOConfig(local_search="2opt_oropt", ls_rounds=16)
+    tau = jnp.ones((32, 32))
+    ci = strategies.choice_matrix(tau, prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(
+        jax.random.PRNGKey(1), prob.dist, ci, 8,
+        nn=prob.nn, n_actual=prob.n_actual)
+    out, lens = aco.polish_tours(prob, res.tours, cfg)
+    out = np.asarray(out)
+    assert (np.asarray(lens) <= np.asarray(res.lengths) + 1e-3).all()
+    assert float(np.asarray(lens).min()) < float(np.asarray(res.lengths).min())
+    # phantom tail untouched, real prefix still a permutation
+    np.testing.assert_array_equal(out[:, 24:],
+                                  np.tile(np.arange(24, 32), (8, 1)))
+    assert (np.sort(out[:, :24], axis=1) == np.arange(24)).all()
+
+
+# ----------------------------------------------------------------- service
+def test_service_buckets_schedules_and_stats():
+    cfg = aco.ACOConfig(iterations=5, selection="gumbel")
+    svc = service.SolverService(cfg, max_batch=2, min_bucket=16)
+    sizes = [10, 12, 14, 20, 24, 30]
+    ids = [svc.submit(tsp.circle_instance(n, seed=n)) for n in sizes]
+    assert svc.pending == 6
+    results = svc.run()
+    assert svc.pending == 0
+    assert [r.request_id for r in results] == ids
+    assert {r.bucket for r in results} == {16, 32}
+    # 3 requests per bucket, max_batch=2 -> 2 jobs per bucket
+    assert svc.stats["batches"] == 4
+    assert svc.stats["buckets"] == {"16": 3, "32": 3}
+    assert svc.stats["instances_per_s"] > 0
+    for r, n in zip(results, sizes):
+        assert r.n == n and len(r.best_tour) == n
+        assert tsp.is_valid_tour(r.best_tour)
+        assert r.gap_pct is not None and r.gap_pct < 100.0
+        assert r.iterations == 5
+
+
+def test_service_rejects_non_mask_aware_configs():
+    with pytest.raises(ValueError, match="use_pallas"):
+        service.SolverService(aco.ACOConfig(use_pallas=True))
+    with pytest.raises(ValueError, match="mask-aware"):
+        service.SolverService(aco.ACOConfig(deposit="s2g"))
+
+
+def test_service_checkpoint_crash_recovery(tmp_path, monkeypatch):
+    """A crash mid-job restores from the newest checkpoint and yields the
+    exact uninterrupted result — including with patience, whose stagnation
+    counters are checkpointed next to the ColonyState so chunked runs
+    compose exactly."""
+    insts = [tsp.circle_instance(n, seed=n) for n in (10, 12, 14)]
+    cfg = aco.ACOConfig(iterations=6, selection="gumbel")
+
+    svc_ref = service.SolverService(cfg, max_batch=4, patience=3)
+    for i in insts:
+        svc_ref.submit(i)
+    ref = svc_ref.run()
+
+    real_run_batch = engine.run_batch
+    crashes = {"left": 1}
+
+    def flaky(problem, states, budgets, cfg_, max_iters, patience=0,
+              since=None):
+        out = real_run_batch(problem, states, budgets, cfg_, max_iters,
+                             patience, since)
+        if int(np.asarray(out[0].iteration).max()) >= 4 and crashes["left"]:
+            crashes["left"] -= 1
+            raise RuntimeError("injected crash after chunk")
+        return out
+
+    monkeypatch.setattr(engine, "run_batch", flaky)
+    svc = service.SolverService(cfg, max_batch=4, patience=3,
+                                checkpoint_dir=str(tmp_path), ckpt_chunk=2)
+    for i in insts:
+        svc.submit(i)
+    got = svc.run()
+    assert crashes["left"] == 0, "crash was never injected"
+    for r, e in zip(got, ref):
+        assert r.best_len == e.best_len
+        np.testing.assert_array_equal(r.best_tour, e.best_tour)
+        assert r.iterations == e.iterations
