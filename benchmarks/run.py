@@ -12,7 +12,8 @@ import sys
 import time
 
 from . import (fig4_overall, fig5_pheromone, local_search, quality, roofline,
-               solver_throughput, table2_tour_construction, table3_pheromone)
+               solver_throughput, streaming_throughput,
+               table2_tour_construction, table3_pheromone)
 
 TABLES = {
     "table2": lambda full: table2_tour_construction.main(
@@ -28,6 +29,9 @@ TABLES = {
         local_search.FULL_SIZES if full else local_search.SIZES),
     "solver": lambda full: solver_throughput.main(
         solver_throughput.CASES if full else solver_throughput.SMOKE_CASES),
+    "streaming": lambda full: streaming_throughput.main(
+        streaming_throughput.CASE if full
+        else streaming_throughput.SMOKE_CASE),
     "roofline": lambda full: roofline.main(),
 }
 

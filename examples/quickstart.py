@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.core import aco, tsp
-from repro.solver import SolverService
+from repro.solver import SolverService, StreamingSolverService
 
 
 def main() -> None:
@@ -74,6 +74,31 @@ def main() -> None:
         assert tsp.is_valid_tour(r.best_tour)
     print(f"[batched solver]    {svc.stats['instances_per_s']:.1f} "
           f"instances/s over {svc.stats['batches']} batch(es) "
+          f"({time.time()-t0:.1f}s)")
+
+    # Streaming / continuous batching (DESIGN.md §9): a resident slot pool
+    # steps in fixed chunks; finished slots are harvested and refilled
+    # mid-run, so requests can arrive while siblings are still solving —
+    # and every result is still bitwise what a solo run would return.
+    # Mixed per-request hyperparameter profiles share the one compiled
+    # program (per-slot alpha/beta/rho/q operands).
+    stream = StreamingSolverService(
+        aco.ACOConfig(iterations=40, selection="gumbel"), max_batch=2,
+        chunk=5, per_instance_hyper=True)
+    stream.submit(tsp.circle_instance(40, seed=0), seed=0)
+    stream.submit(tsp.circle_instance(52, seed=1), seed=1,
+                  hyper={"alpha": 2.0, "rho": 0.3})   # its own profile
+    stream.step()                                      # pool is now running
+    stream.submit(tsp.circle_instance(44, seed=2), seed=2,
+                  priority=5)                          # admitted mid-run
+    t0 = time.time()
+    for r in stream.run_until_drained():
+        print(f"[streaming solver]  {r.name}: n={r.n} best={r.best_len:.1f} "
+              f"gap={r.gap_pct:.2f}% latency={r.latency_s:.2f}s")
+        assert tsp.is_valid_tour(r.best_tour)
+    s = stream.stats
+    print(f"[streaming solver]  occupancy={s['occupancy_mean']:.2f} "
+          f"fills={s['fills']} chunks={s['chunks']} "
           f"({time.time()-t0:.1f}s)")
 
 

@@ -61,6 +61,34 @@ class ColonyState(NamedTuple):
     key: Array            # PRNG key
 
 
+class Hyper(NamedTuple):
+    """Per-instance ACO hyperparameters as traced scalar operands.
+
+    When attached to ``Problem.hyper`` these *override* the static
+    ``ACOConfig`` fields of the same name inside ``colony_step``, and —
+    because they are operands, per-instance under vmap — one compiled
+    batched program (solver/engine.run_batch, solver/streaming) can mix
+    tuning profiles across slots.  Exponentiation then takes the generic
+    ``x ** p`` route instead of the static integer-folding fast path, so
+    numerics are comparable only *within* the operand mode: batched ==
+    solo holds bitwise when both carry a Hyper (tests/test_solver.py).
+    """
+    alpha: Array          # () float32  choice exponent on tau
+    beta: Array           # () float32  choice exponent on eta
+    rho: Array            # () float32  evaporation rate
+    q: Array              # () float32  deposit numerator
+
+    @classmethod
+    def make(cls, cfg: "ACOConfig", alpha: Optional[float] = None,
+             beta: Optional[float] = None, rho: Optional[float] = None,
+             q: Optional[float] = None) -> "Hyper":
+        """Profile from a config plus any per-field overrides."""
+        def pick(v, d):
+            return jnp.float32(d if v is None else v)
+        return cls(pick(alpha, cfg.alpha), pick(beta, cfg.beta),
+                   pick(rho, cfg.rho), pick(q, cfg.q))
+
+
 class Problem(NamedTuple):
     """Device-resident constants for one TSP instance.
 
@@ -68,11 +96,16 @@ class Problem(NamedTuple):
     (solver/batch.py: phantom cities at inf distance, eta exactly 0) it is
     the scalar count of real cities — a traced operand, per-instance under
     vmap — and flips colony_step into mask-aware mode (DESIGN.md §8).
+
+    ``hyper`` is None for ordinary instances (hyperparameters come from the
+    static ACOConfig); when set, its per-instance alpha/beta/rho/q operands
+    take precedence (DESIGN.md §9).
     """
     dist: Array           # (n, n) float32
     eta: Array            # (n, n) float32  (1/d)
     nn: Array             # (n, k) int32
     n_actual: Optional[Array] = None   # () int32, or None (unpadded)
+    hyper: Optional[Hyper] = None      # per-instance overrides, or None
 
 
 def make_problem(instance: tsp.TSPInstance, nn_k: int = 30) -> Problem:
@@ -82,14 +115,20 @@ def make_problem(instance: tsp.TSPInstance, nn_k: int = 30) -> Problem:
     return Problem(dist, eta, nn)
 
 
-def initial_tau(instance: tsp.TSPInstance, cfg: ACOConfig) -> float:
-    """tau0 = m / C_nn (AS), 1/(rho C_nn) (MMAS), 1/(n C_nn) (ACS)."""
+def initial_tau(instance: tsp.TSPInstance, cfg: ACOConfig,
+                rho: Optional[float] = None) -> float:
+    """tau0 = m / C_nn (AS), 1/(rho C_nn) (MMAS), 1/(n C_nn) (ACS).
+
+    ``rho`` overrides cfg.rho (per-instance Hyper profiles: MMAS tau0
+    depends on the evaporation rate, so a slot's initial trail must match
+    the profile it will run under).
+    """
     d = instance.distances()
     _, c_nn = tsp.nearest_neighbour_tour(d)
     n = instance.n
     m = cfg.num_ants(n)
     if cfg.variant == "mmas":
-        return 1.0 / (cfg.rho * c_nn)
+        return 1.0 / ((cfg.rho if rho is None else rho) * c_nn)
     if cfg.variant == "acs":
         return 1.0 / (n * c_nn)
     return m / c_nn
@@ -109,15 +148,11 @@ def init_colony(instance: tsp.TSPInstance, cfg: ACOConfig,
     )
 
 
-def _choice(tau: Array, eta: Array, cfg: ACOConfig) -> Array:
+def _choice(tau: Array, eta: Array, cfg: ACOConfig, alpha, beta) -> Array:
     if cfg.use_pallas:
         from repro.kernels import ops as kops
         return kops.choice_info(tau, eta, cfg.alpha, cfg.beta)
-    return strategies.choice_matrix(tau, eta, cfg.alpha, cfg.beta)
-
-
-def _deposit_weights(lengths: Array, cfg: ACOConfig) -> Array:
-    return cfg.q / lengths
+    return strategies.choice_matrix(tau, eta, alpha, beta)
 
 
 def ls_config(cfg: ACOConfig) -> localsearch.LocalSearchConfig:
@@ -187,9 +222,18 @@ def colony_step(problem: Problem, state: ColonyState,
         raise NotImplementedError(
             "use_pallas is not mask-aware yet; padded instances (solver/) "
             "run the pure-JAX path")
+    h = problem.hyper                  # None, or traced per-instance Hyper
+    if h is not None and cfg.use_pallas:
+        raise NotImplementedError(
+            "use_pallas kernels take static alpha/beta; per-instance Hyper "
+            "operands run the pure-JAX path")
+    alpha = cfg.alpha if h is None else h.alpha
+    beta = cfg.beta if h is None else h.beta
+    rho = cfg.rho if h is None else h.rho
+    q = cfg.q if h is None else h.q
     key, k_tour = jax.random.split(state.key)
 
-    choice_info = _choice(state.tau, problem.eta, cfg)
+    choice_info = _choice(state.tau, problem.eta, cfg, alpha, beta)
 
     method = cfg.construction
     if cfg.use_pallas and method == "data_parallel":
@@ -199,7 +243,7 @@ def colony_step(problem: Problem, state: ColonyState,
         k_tour, problem.dist, choice_info, m,
         method=method, selection=cfg.selection,
         nn=problem.nn, tau=state.tau, eta=problem.eta,
-        alpha=cfg.alpha, beta=cfg.beta, n_actual=n_act,
+        alpha=alpha, beta=beta, n_actual=n_act,
     )
 
     if cfg.local_search != "none":
@@ -216,18 +260,17 @@ def colony_step(problem: Problem, state: ColonyState,
     best_tour = jnp.where(improved, it_best_tour, state.best_tour)
 
     if cfg.variant == "as":
-        w = _deposit_weights(res.lengths, cfg)
-        dep_tours, dep_w = res.tours, w
+        dep_tours, dep_w = res.tours, q / res.lengths
     elif cfg.variant == "mmas":
         if cfg.mmas_best == "global":
             dep_tours = best_tour[None, :]
-            dep_w = (cfg.q / best_len)[None]
+            dep_w = (q / best_len)[None]
         else:
             dep_tours = it_best_tour[None, :]
-            dep_w = (cfg.q / it_best_len)[None]
+            dep_w = (q / it_best_len)[None]
     elif cfg.variant == "acs":
         dep_tours = best_tour[None, :]
-        dep_w = (cfg.rho * cfg.q / best_len)[None]
+        dep_w = (rho * q / best_len)[None]
     else:
         raise ValueError(f"unknown variant {cfg.variant}")
 
@@ -235,20 +278,20 @@ def colony_step(problem: Problem, state: ColonyState,
         from repro.kernels import ops as kops
         tau = kops.pheromone_update(state.tau, dep_tours, dep_w, cfg.rho)
     else:
-        tau = pheromone.update(state.tau, dep_tours, dep_w, cfg.rho,
+        tau = pheromone.update(state.tau, dep_tours, dep_w, rho,
                                strategy=cfg.deposit, tile=cfg.deposit_tile,
                                n_actual=n_act)
 
     # MMAS/ACS normalisations use the real city count of padded instances.
     n_eff = n if n_act is None else n_act
     if cfg.variant == "mmas":
-        tau_max = cfg.q / (cfg.rho * best_len)
+        tau_max = q / (rho * best_len)
         tau_min = tau_max / (2.0 * n_eff)
         tau = jnp.clip(tau, tau_min, tau_max)
     elif cfg.variant == "acs":
         # Parallel-ACS local rule: decay edges crossed this iteration.
         f, t = pheromone.tour_edges(res.tours, n_act)
-        tau0 = cfg.q / (n_eff * jnp.maximum(best_len, 1e-9))
+        tau0 = q / (n_eff * jnp.maximum(best_len, 1e-9))
         ew = None
         if n_act is not None:
             # phantom-tail crossings must not decay (multiplicity 0)

@@ -92,22 +92,26 @@ def deposit_reduction(n: int, tours: Array, w: Array,
 
 @partial(jax.jit, static_argnames=("n", "row_tile", "col_tile"))
 def deposit_s2g(n: int, tours: Array, w: Array, row_tile: int = 0,
-                col_tile: int = 0) -> Array:
+                col_tile: int = 0, n_actual: Optional[Array] = None) -> Array:
     """Scatter-to-gather: cell (i,j) gathers over ALL m*n edges (paper Fig. 3).
 
     row_tile/col_tile = 0 means untiled semantics (single tile). The tiled
     variant is the paper's 'Scatter to Gather + Tiling'; tiles bound the
     VMEM-resident membership masks exactly like the paper's shared-memory
     tiles. Work is O(n^2 * m * n) regardless of tiling — that is the point.
+
+    Mask-aware for padded tours: phantom-tail edges carry weight 0 so their
+    (phantom, phantom) membership hits contribute nothing, and the closing
+    edge wraps at position n_actual-1 (DESIGN.md §8).
     """
-    f, t = tour_edges(tours)
+    f, t = tour_edges(tours, n_actual)
     m, ns = f.shape
     bi = row_tile or min(n, 64)
     bj = col_tile or min(n, 64)
     # pad n up to multiples
     ni = -(-n // bi) * bi
     nj = -(-n // bj) * bj
-    fw = (f.ravel(), (w[:, None] * jnp.ones((m, ns), jnp.float32)).ravel())
+    fw = (f.ravel(), _edge_weights(tours, w, n_actual))
     tr = t.ravel()
 
     def row_block(i0):
@@ -129,25 +133,29 @@ def deposit_s2g(n: int, tours: Array, w: Array, row_tile: int = 0,
 
 
 @partial(jax.jit, static_argnames=("n", "chunk"))
-def deposit_onehot(n: int, tours: Array, w: Array, chunk: int = 8) -> Array:
+def deposit_onehot(n: int, tours: Array, w: Array, chunk: int = 8,
+                   n_actual: Optional[Array] = None) -> Array:
     """TPU-native deposit: D = F^T (w*T) accumulated over ant chunks.
 
     F/T are (chunk*ns, n) one-hot matrices, never larger than one chunk.
+    Mask-aware for padded tours: the per-edge weight matrix zeroes the
+    phantom tail and the closing edge wraps at position n_actual-1.
     """
-    f, t = tour_edges(tours)
+    f, t = tour_edges(tours, n_actual)
     m, ns = f.shape
+    we = _edge_weights(tours, w, n_actual).reshape(m, ns)
     c = min(chunk, m)
     pad = (-m) % c
     if pad:
         f = jnp.concatenate([f, jnp.zeros((pad, ns), f.dtype)], 0)
         t = jnp.concatenate([t, jnp.zeros((pad, ns), t.dtype)], 0)
-        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)], 0)
+        we = jnp.concatenate([we, jnp.zeros((pad, ns), we.dtype)], 0)
     nchunks = f.shape[0] // c
 
     def body(acc, i):
         fs = jax.lax.dynamic_slice_in_dim(f, i * c, c).ravel()
         ts = jax.lax.dynamic_slice_in_dim(t, i * c, c).ravel()
-        ws = jnp.repeat(jax.lax.dynamic_slice_in_dim(w, i * c, c), ns)
+        ws = jax.lax.dynamic_slice_in_dim(we, i * c, c).ravel()
         F = jax.nn.one_hot(fs, n, dtype=jnp.float32)
         T = jax.nn.one_hot(ts, n, dtype=jnp.float32) * ws[:, None]
         return acc + F.T @ T, None
@@ -166,16 +174,12 @@ def deposit(n: int, tours: Array, w: Array, strategy: str = "scatter",
         return deposit_scatter(n, tours, w, n_actual=n_actual)
     if strategy == "reduction":
         return deposit_reduction(n, tours, w, n_actual=n_actual)
-    if n_actual is not None:
-        raise ValueError(
-            f"deposit strategy {strategy!r} is not mask-aware; padded "
-            "instances (solver/) support 'scatter' and 'reduction'")
     if strategy == "s2g":
-        return deposit_s2g(n, tours, w, 0, 0)
+        return deposit_s2g(n, tours, w, 0, 0, n_actual)
     if strategy == "s2g_tiled":
-        return deposit_s2g(n, tours, w, tile, tile)
+        return deposit_s2g(n, tours, w, tile, tile, n_actual)
     if strategy == "onehot":
-        return deposit_onehot(n, tours, w)
+        return deposit_onehot(n, tours, w, n_actual=n_actual)
     raise ValueError(f"unknown deposit strategy {strategy}")
 
 

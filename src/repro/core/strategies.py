@@ -250,13 +250,16 @@ def construct_tours(
                       selection, masked)
 
 
-def choice_matrix(tau: Array, eta: Array, alpha: float, beta: float) -> Array:
+def choice_matrix(tau: Array, eta: Array, alpha, beta) -> Array:
     """The paper's Choice kernel: precompute tau^a * eta^b once per iteration.
 
-    Integer exponents take the cheap path (XLA folds x**1, x**2 to mults);
-    the Pallas version lives in kernels/choice_info.py.
+    Static integer exponents take the cheap path (XLA folds x**1, x**2 to
+    mults); traced exponents (per-instance Hyper operands, DESIGN.md §9)
+    take the generic pow.  The Pallas version lives in kernels/choice_info.py.
     """
-    def ipow(x: Array, p: float) -> Array:
+    def ipow(x: Array, p) -> Array:
+        if not isinstance(p, (int, float)):
+            return x ** p               # traced per-instance exponent
         if p == 1.0:
             return x
         if p == 2.0:

@@ -1,11 +1,18 @@
 """Batched TSP solver serving driver (mirrors launch/serve.py for the LM).
 
-Generates a mixed workload of synthetic instances, submits them to the
-SolverService queue, runs the bucket scheduler, and prints JSON stats.
+Two modes:
+
+- default: generate a mixed workload, submit everything to the
+  drain-the-queue SolverService, run the bucket scheduler, print JSON stats;
+- ``--stream``: replay a Poisson arrival trace through the
+  continuous-batching StreamingSolverService (DESIGN.md §9) — requests are
+  admitted into resident slots mid-run as they arrive.
 
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.solve_serve \
         --num-instances 8 --min-n 12 --max-n 48 --iterations 20
+    PYTHONPATH=src python -m repro.launch.solve_serve --stream \
+        --num-instances 8 --arrival-rate 4 --chunk 2 --iterations 10
 """
 from __future__ import annotations
 
@@ -15,7 +22,8 @@ import json
 import numpy as np
 
 from repro.core import aco, tsp
-from repro.solver import SolverService
+from repro.solver import (SolverService, StreamingSolverService,
+                          make_poisson_trace, replay_trace)
 
 
 def make_workload(num: int, min_n: int, max_n: int, seed: int):
@@ -32,6 +40,23 @@ def make_workload(num: int, min_n: int, max_n: int, seed: int):
     return out
 
 
+def _report(results, stats) -> None:
+    gaps = [r.gap_pct for r in results if r.gap_pct is not None]
+    print(json.dumps({
+        "results": [
+            {"id": r.request_id, "name": r.name, "n": r.n,
+             "bucket": r.bucket, "best_len": round(r.best_len, 2),
+             "iterations": r.iterations,
+             "gap_pct": None if r.gap_pct is None else round(r.gap_pct, 2),
+             "latency_s": round(r.latency_s, 4)}
+            for r in results
+        ],
+        "mean_gap_pct": round(float(np.mean(gaps)), 2) if gaps else None,
+        "stats": {k: (round(v, 4) if isinstance(v, float) else v)
+                  for k, v in stats.items()},
+    }, indent=2))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--num-instances", type=int, default=8)
@@ -46,11 +71,37 @@ def main() -> None:
     ap.add_argument("--patience", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
+    # streaming mode (continuous batching, DESIGN.md §9)
+    ap.add_argument("--stream", action="store_true",
+                    help="replay a Poisson arrival trace through the "
+                         "continuous-batching streaming service")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="--stream: Poisson arrivals per second")
+    ap.add_argument("--chunk", type=int, default=2,
+                    help="--stream: iterations per scheduler tick")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="--stream: admission backpressure bound")
     args = ap.parse_args()
 
     cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
                         selection=args.selection,
                         local_search=args.local_search, seed=args.seed)
+
+    if args.stream:
+        if args.checkpoint_dir:
+            ap.error("--checkpoint-dir is not supported with --stream "
+                     "(streaming checkpointing is not implemented)")
+        svc = StreamingSolverService(
+            cfg, max_batch=args.max_batch, min_bucket=args.min_bucket,
+            chunk=args.chunk, patience=args.patience,
+            max_waiting=args.max_waiting)
+        trace = make_poisson_trace(args.num_instances, args.arrival_rate,
+                                   args.min_n, args.max_n, seed=args.seed,
+                                   iterations=args.iterations)
+        results = replay_trace(svc, trace)
+        _report(sorted(results, key=lambda r: r.request_id), svc.stats)
+        return
+
     svc = SolverService(cfg, max_batch=args.max_batch,
                         min_bucket=args.min_bucket, patience=args.patience,
                         checkpoint_dir=args.checkpoint_dir)
@@ -58,20 +109,7 @@ def main() -> None:
                               args.seed):
         svc.submit(inst)
     results = svc.run()
-
-    gaps = [r.gap_pct for r in results if r.gap_pct is not None]
-    print(json.dumps({
-        "results": [
-            {"id": r.request_id, "name": r.name, "n": r.n,
-             "bucket": r.bucket, "best_len": round(r.best_len, 2),
-             "iterations": r.iterations,
-             "gap_pct": None if r.gap_pct is None else round(r.gap_pct, 2)}
-            for r in results
-        ],
-        "mean_gap_pct": round(float(np.mean(gaps)), 2) if gaps else None,
-        "stats": {k: (round(v, 4) if isinstance(v, float) else v)
-                  for k, v in svc.stats.items()},
-    }, indent=2))
+    _report(results, svc.stats)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,24 @@
 """Instance-batched solver: pad/bucket/vmap many TSP instances per device.
 
-- batch.py    pads instances to power-of-two bucket sizes with masked
-              phantom cities and stacks them into a ProblemBatch;
-- engine.py   vmaps core.aco.colony_step over the instance axis so one
-              jitted call advances B colonies, with per-instance budgets
-              and a done-mask early exit;
-- service.py  a queue-and-scheduler request loop with throughput stats
-              and supervisor/checkpoint crash recovery.
+- batch.py     pads instances to power-of-two bucket sizes with masked
+               phantom cities and stacks them into a ProblemBatch;
+- engine.py    vmaps core.aco.colony_step over the instance axis so one
+               jitted call advances B colonies, with per-instance budgets
+               and a done-mask early exit;
+- service.py   a drain-the-queue request loop with throughput stats
+               and supervisor/checkpoint crash recovery;
+- streaming.py continuous batching: per-bucket resident slot pools with
+               chunked stepping, harvest + refill surgery mid-run,
+               priority/deadline admission and backpressure.
 
-See DESIGN.md §8 for the bucketing policy and masking invariants.
+See DESIGN.md §8 for the bucketing policy and masking invariants, §9 for
+the streaming slot lifecycle.
 """
 from .batch import (ProblemBatch, bucket_size, make_batch,  # noqa: F401
                     padded_problem)
-from .engine import init_states, run_batch, solve_instances  # noqa: F401
+from .engine import (init_state, init_states, run_batch,  # noqa: F401
+                     solve_instances)
 from .service import SolveResult, SolverService  # noqa: F401
+from .streaming import (AdmissionError, StreamingPool,  # noqa: F401
+                        StreamingSolverService, TraceItem,
+                        make_poisson_trace, replay_trace)

@@ -22,6 +22,7 @@ Masking invariants for a padded instance with ``n_actual`` real cities in an
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,14 +42,21 @@ def bucket_size(n: int, min_bucket: int = 16) -> int:
 
 
 def padded_problem(instance: tsp.TSPInstance, n_pad: int,
-                   nn_k: int = 30) -> aco.Problem:
-    """Mask-aware Problem for one instance padded to ``n_pad`` cities."""
+                   nn_k: int = 30,
+                   hyper: Optional[aco.Hyper] = None) -> aco.Problem:
+    """Mask-aware Problem for one instance padded to ``n_pad`` cities.
+
+    ``hyper`` attaches per-instance alpha/beta/rho/q operands (DESIGN.md
+    §9); batch peers must then all carry one (the stacked Problem's pytree
+    structure is per-program, not per-slot).
+    """
     padded = tsp.pad_instance(instance, n_pad)
     dist = jnp.asarray(padded.distances())
     eta = tsp.heuristic_matrix(dist)     # 1/inf == 0 at phantom entries
     nn = tsp.nn_lists(dist, min(nn_k, n_pad - 1))
     return aco.Problem(dist, eta, nn,
-                       n_actual=jnp.asarray(instance.n, jnp.int32))
+                       n_actual=jnp.asarray(instance.n, jnp.int32),
+                       hyper=hyper)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,17 +72,28 @@ class ProblemBatch:
 
 
 def make_batch(instances, n_pad: int | None = None, nn_k: int = 30,
-               min_bucket: int = 16) -> ProblemBatch:
+               min_bucket: int = 16,
+               hypers: Optional[Sequence[Optional[aco.Hyper]]] = None
+               ) -> ProblemBatch:
     """Pad every instance to a common bucket and stack into one Problem.
 
     ``n_pad`` defaults to the bucket covering the largest instance.
+    ``hypers``: optional per-instance Hyper profiles; entries left None
+    default to the batch's uniform-structure requirement via
+    ``aco.Hyper.make`` at the caller (all-or-nothing — mixing Hyper and
+    non-Hyper slots would change the pytree structure per slot).
     """
     instances = tuple(instances)
     if not instances:
         raise ValueError("empty batch")
     if n_pad is None:
         n_pad = bucket_size(max(i.n for i in instances), min_bucket)
-    problems = [padded_problem(i, n_pad, nn_k) for i in instances]
+    if hypers is None:
+        hypers = [None] * len(instances)
+    elif any(h is None for h in hypers) and any(h is not None for h in hypers):
+        raise ValueError("hypers must be all-None or all-set within a batch")
+    problems = [padded_problem(i, n_pad, nn_k, h)
+                for i, h in zip(instances, hypers)]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *problems)
     return ProblemBatch(problem=stacked, instances=instances, n_pad=n_pad)
 

@@ -31,19 +31,37 @@ from . import batch as batch_mod
 Array = jax.Array
 
 
+def init_state(instance: tsp.TSPInstance, cfg: aco.ACOConfig, seed: int,
+               n_pad: int,
+               hyper: Optional[aco.Hyper] = None) -> aco.ColonyState:
+    """Fresh single-slot ColonyState: tau0 from the *real* instance.
+
+    This is the per-slot reinitialisation the streaming pool's refill
+    surgery writes into a harvested slot (solver/streaming.py) — identical
+    to what a solo run starts from, which is what makes streaming results
+    bitwise equal to solo runs.  ``hyper`` feeds the per-profile rho into
+    the MMAS tau0.
+    """
+    tau0 = aco.initial_tau(
+        instance, cfg, rho=None if hyper is None else float(hyper.rho))
+    return aco.ColonyState(
+        tau=jnp.full((n_pad, n_pad), tau0, jnp.float32),
+        best_tour=jnp.arange(n_pad, dtype=jnp.int32),
+        best_len=jnp.asarray(np.float32(np.inf)),
+        iteration=jnp.asarray(0, jnp.int32),
+        key=jax.random.PRNGKey(seed),
+    )
+
+
 def init_states(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
-                seeds: Sequence[int], n_pad: int) -> aco.ColonyState:
+                seeds: Sequence[int], n_pad: int,
+                hypers: Optional[Sequence[Optional[aco.Hyper]]] = None
+                ) -> aco.ColonyState:
     """Stacked ColonyState for a bucket: tau0 from each *real* instance."""
-    states = []
-    for inst, seed in zip(instances, seeds):
-        tau0 = aco.initial_tau(inst, cfg)
-        states.append(aco.ColonyState(
-            tau=jnp.full((n_pad, n_pad), tau0, jnp.float32),
-            best_tour=jnp.arange(n_pad, dtype=jnp.int32),
-            best_len=jnp.asarray(np.float32(np.inf)),
-            iteration=jnp.asarray(0, jnp.int32),
-            key=jax.random.PRNGKey(seed),
-        ))
+    if hypers is None:
+        hypers = [None] * len(instances)
+    states = [init_state(inst, cfg, seed, n_pad, h)
+              for inst, seed, h in zip(instances, seeds, hypers)]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
@@ -100,17 +118,23 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
                     iterations: Optional[Sequence[int]] = None,
                     seeds: Optional[Sequence[int]] = None,
                     n_pad: Optional[int] = None, patience: int = 0,
-                    nn_k: Optional[int] = None
+                    nn_k: Optional[int] = None,
+                    hypers: Optional[Sequence[aco.Hyper]] = None
                     ) -> tuple[aco.ColonyState, batch_mod.ProblemBatch]:
-    """Convenience one-shot: batch, init, run. All instances in one bucket."""
+    """Convenience one-shot: batch, init, run. All instances in one bucket.
+
+    ``hypers``: per-instance alpha/beta/rho/q profiles (aco.Hyper); one
+    bucket then mixes tuning profiles in a single compiled program.
+    """
     instances = tuple(instances)
     its = list(iterations) if iterations is not None else \
         [cfg.iterations] * len(instances)
     sds = list(seeds) if seeds is not None else \
         [cfg.seed + i for i in range(len(instances))]
     b = batch_mod.make_batch(instances, n_pad,
-                             nn_k if nn_k is not None else cfg.nn_k)
-    states = init_states(instances, cfg, sds, b.n_pad)
+                             nn_k if nn_k is not None else cfg.nn_k,
+                             hypers=hypers)
+    states = init_states(instances, cfg, sds, b.n_pad, hypers)
     budgets = jnp.asarray(its, jnp.int32)
     states, _ = run_batch(b.problem, states, budgets, cfg, int(max(its)),
                           patience)

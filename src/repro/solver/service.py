@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import aco, tsp
+from repro.core import aco, pheromone, tsp
 from repro.runtime.supervisor import Supervisor, SupervisorConfig
 
 from . import batch as batch_mod
@@ -69,10 +69,9 @@ class SolverService:
         if cfg.use_pallas:
             raise ValueError("SolverService requires use_pallas=False "
                              "(padded instances run the pure-JAX path)")
-        if cfg.deposit not in ("scatter", "reduction"):
-            raise ValueError(
-                f"deposit {cfg.deposit!r} is not mask-aware; the solver "
-                "supports 'scatter' and 'reduction'")
+        if cfg.deposit not in pheromone.STRATEGIES:
+            raise ValueError(f"unknown deposit strategy {cfg.deposit!r}; "
+                             f"supported: {', '.join(pheromone.STRATEGIES)}")
         self.cfg = cfg
         self.max_batch = max_batch
         self.min_bucket = min_bucket

@@ -1,0 +1,479 @@
+"""Continuous-batching streaming solver: slot-based engine, mid-run admission.
+
+The drain-the-queue scheduler (service.py) admits work only at batch
+boundaries: a straggler holds its whole batch, and newly arrived requests
+wait for the full drain.  This module removes that barrier the way LM
+serving engines do (continuous batching): each bucket owns a *resident*
+stacked ``ColonyState`` of ``max_batch`` slots, and a step loop runs
+fixed-size chunks of the vmapped ``colony_step`` (engine.run_batch).  After
+every chunk, slots whose per-slot done mask fires (absolute iteration
+counter >= budget, or patience) are harvested into ``SolveResult``s and
+immediately refilled from the pending queue by **state surgery** — the
+slot's rows of the stacked Problem/ColonyState pytrees are overwritten via
+``.at[idx].set`` with a fresh padded problem and ``engine.init_state`` — so
+one compiled program per (bucket, slots, cfg, chunk) serves an unbounded
+request stream with no drain barrier.
+
+Exactness contract (tests/test_streaming.py): any request solved through
+the streaming pool yields *bitwise* the same best tour as a solo
+``engine.run_batch`` call with the same seed.  Three properties compose to
+give this:
+
+- refill surgery is a pure functional ``.at[idx].set`` — sibling slots'
+  leaves are untouched bitwise;
+- ``run_batch`` freezes finished slots against their own *absolute*
+  iteration counter, so chunked stepping composes exactly with one long
+  call (the crash-recovery property of DESIGN.md §8, reused);
+- a refilled slot starts from exactly the state a solo run starts from
+  (``engine.init_state``: tau0 from the real instance, PRNGKey(seed)).
+
+Admission control: waiting requests are ordered by (priority desc,
+deadline asc, arrival); ``max_waiting`` bounds the queue (backpressure —
+``submit`` raises AdmissionError so callers can shed load upstream).
+Live stats track slot occupancy, harvest latency percentiles and
+instances/sec.  DESIGN.md §9 records the slot lifecycle and invariants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aco, pheromone, tsp
+
+from . import batch as batch_mod
+from . import engine
+from .service import SolveResult
+
+
+class AdmissionError(RuntimeError):
+    """Raised by submit() when the waiting queue is at max_waiting."""
+
+
+@dataclasses.dataclass
+class StreamRequest:
+    request_id: int
+    instance: tsp.TSPInstance
+    iterations: int
+    seed: int
+    priority: int = 0                  # higher admitted first
+    deadline: Optional[float] = None   # perf_counter seconds; earlier first
+    hyper: Optional[aco.Hyper] = None
+    submitted_at: float = 0.0
+    # Prepped at submit time (off the stepping critical path): the padded
+    # Problem and fresh ColonyState the refill surgery writes into a slot.
+    prob: Optional[aco.Problem] = None
+    state: Optional[aco.ColonyState] = None
+
+    def order_key(self):
+        return (-self.priority,
+                self.deadline if self.deadline is not None else float("inf"),
+                self.request_id)
+
+    def prep(self, bucket: int, cfg: aco.ACOConfig, nn_k: int) -> None:
+        if self.prob is None:
+            self.prob = batch_mod.padded_problem(
+                self.instance, bucket, nn_k, self.hyper)
+            self.state = engine.init_state(
+                self.instance, cfg, self.seed, bucket, self.hyper)
+
+
+class StreamingPool:
+    """One bucket's resident slots: a stacked Problem/ColonyState of
+    ``slots`` rows stepped together; empty slots hold a frozen dummy
+    (budget 0 => done => the engine's where-merge discards their step).
+    """
+
+    def __init__(self, bucket: int, slots: int, cfg: aco.ACOConfig,
+                 patience: int = 0, nn_k: Optional[int] = None,
+                 per_instance_hyper: bool = False):
+        self.bucket = bucket
+        self.slots = slots
+        self.cfg = cfg
+        self.patience = patience
+        self.nn_k = cfg.nn_k if nn_k is None else nn_k
+        self.per_instance_hyper = per_instance_hyper
+        # Dummy resident for empty slots: any small valid instance works —
+        # budget 0 keeps it permanently frozen, so its trajectory is never
+        # observed; it only has to be finite so the discarded vmap lanes
+        # stay numerically tame.
+        dummy = tsp.random_instance(2, seed=0)
+        dhyper = aco.Hyper.make(cfg) if per_instance_hyper else None
+        dprob = batch_mod.padded_problem(dummy, bucket, self.nn_k, dhyper)
+        dstate = engine.init_state(dummy, cfg, 0, bucket, dhyper)
+        stack = lambda x: jnp.broadcast_to(x[None], (slots,) + x.shape)
+        self.problem: aco.Problem = jax.tree.map(stack, dprob)
+        self.states: aco.ColonyState = jax.tree.map(stack, dstate)
+        self.budgets = jnp.zeros((slots,), jnp.int32)
+        self.since = jnp.zeros((slots,), jnp.int32)
+        self.requests: list[Optional[StreamRequest]] = [None] * slots
+        self.filled_at: list[float] = [0.0] * slots
+        self.fills = 0
+        self.chunks = 0
+
+    # ---------------------------------------------------------- occupancy
+    @property
+    def occupied(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    # ------------------------------------------------------ refill surgery
+    def fill_slots(self, assignments: Sequence[tuple[int, StreamRequest]]
+                   ) -> None:
+        """Overwrite each (slot, request) pair's rows of the resident
+        pytrees with a fresh problem + initial state.  One batched
+        ``.at[idx].set`` per leaf; sibling slots are untouched bitwise."""
+        if not assignments:
+            return
+        now = time.perf_counter()
+        probs, states, idx, buds = [], [], [], []
+        for i, req in assignments:
+            assert self.requests[i] is None, f"slot {i} occupied"
+            req.prep(self.bucket, self.cfg, self.nn_k)
+            probs.append(req.prob)
+            states.append(req.state)
+            idx.append(i)
+            buds.append(req.iterations)
+            self.requests[i] = req
+            self.filled_at[i] = now
+            self.fills += 1
+        ix = jnp.asarray(idx, jnp.int32)
+        newp = jax.tree.map(lambda *xs: jnp.stack(xs), *probs)
+        news = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        self.problem = jax.tree.map(lambda P, x: P.at[ix].set(x),
+                                    self.problem, newp)
+        self.states = jax.tree.map(lambda S, x: S.at[ix].set(x),
+                                   self.states, news)
+        self.budgets = self.budgets.at[ix].set(jnp.asarray(buds, jnp.int32))
+        self.since = self.since.at[ix].set(0)
+        for _, req in assignments:        # resident copies own the data now
+            req.prob = req.state = None
+
+    # ------------------------------------------------------------ stepping
+    def step_chunk(self, chunk: int) -> None:
+        """Advance every active slot by up to ``chunk`` iterations."""
+        self.states, self.since = engine.run_batch(
+            self.problem, self.states, self.budgets, self.cfg, chunk,
+            self.patience, self.since)
+        self.chunks += 1
+
+    def harvest(self) -> list[SolveResult]:
+        """Collect every occupied slot whose done mask fired; free the slot
+        (budget 0 refreezes it) so the next admit round can refill it."""
+        it = np.asarray(self.states.iteration)
+        done = it >= np.asarray(self.budgets)
+        if self.patience > 0:
+            done = done | (np.asarray(self.since) >= self.patience)
+        hits = [i for i, r in enumerate(self.requests)
+                if r is not None and done[i]]
+        if not hits:
+            return []
+        now = time.perf_counter()
+        lens = np.asarray(self.states.best_len)
+        tours = np.asarray(self.states.best_tour)
+        out = []
+        freed = []
+        for i in hits:
+            req = self.requests[i]
+            inst = req.instance
+            opt = inst.known_optimum
+            best_len = float(lens[i])
+            out.append(SolveResult(
+                request_id=req.request_id, name=inst.name, n=inst.n,
+                bucket=self.bucket, best_len=best_len,
+                best_tour=batch_mod.trim_tour(tours[i], inst.n),
+                iterations=int(it[i]),
+                gap_pct=(100.0 * (best_len / opt - 1.0) if opt else None),
+                latency_s=now - req.submitted_at,
+                solve_s=now - self.filled_at[i]))
+            self.requests[i] = None
+            freed.append(i)
+        self.budgets = self.budgets.at[jnp.asarray(freed)].set(0)
+        return out
+
+
+class StreamingSolverService:
+    """Mid-run-admission request loop over per-bucket streaming pools.
+
+    submit() only queues; admission happens at each step(): waiting
+    requests (priority/deadline ordered) fill free slots of their bucket's
+    pool, every non-empty pool advances one chunk, finished slots are
+    harvested and immediately refillable.  ``max_waiting`` bounds the
+    queue (AdmissionError).  ``per_instance_hyper=True`` makes every slot
+    carry alpha/beta/rho/q operands so one bucket mixes tuning profiles
+    (requests may pass a Hyper or override dict; others run the config
+    profile).
+    """
+
+    def __init__(self, cfg: Optional[aco.ACOConfig] = None,
+                 max_batch: int = 8, min_bucket: int = 16, chunk: int = 5,
+                 patience: int = 0, max_waiting: Optional[int] = None,
+                 per_instance_hyper: bool = False):
+        if cfg is None:
+            cfg = aco.ACOConfig()
+        if cfg.use_pallas:
+            raise ValueError("StreamingSolverService requires "
+                             "use_pallas=False (padded instances run the "
+                             "pure-JAX path)")
+        if cfg.deposit not in pheromone.STRATEGIES:
+            raise ValueError(f"unknown deposit strategy {cfg.deposit!r}; "
+                             f"supported: {', '.join(pheromone.STRATEGIES)}")
+        if chunk < 1:
+            raise ValueError(f"chunk {chunk} < 1")
+        if max_waiting is not None and max_waiting < 1:
+            raise ValueError(f"max_waiting {max_waiting} < 1")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.chunk = chunk
+        self.patience = patience
+        self.max_waiting = max_waiting
+        self.per_instance_hyper = per_instance_hyper
+        # Prep (padded Problem + initial state) is eager only for the head
+        # of the queue: it keeps refill surgery off the stepping critical
+        # path without letting a deep backlog pin O(waiting * n_pad^2)
+        # device memory — requests beyond the window are prepped when they
+        # reach the head (at admit time) or, worst case, at fill.
+        self.prep_ahead = 4 * max_batch
+        self._pools: dict[int, StreamingPool] = {}
+        self._waiting: list[StreamRequest] = []
+        self._next_id = 0
+        self._submitted = 0
+        self._rejected = 0
+        self._completed = 0
+        self._latencies: list[float] = []
+        self._occ_samples: list[float] = []
+        self._per_bucket_done: dict[int, int] = {}
+        self._t_first_submit: Optional[float] = None
+        self._t_last_harvest: Optional[float] = None
+
+    # -------------------------------------------------------------- queue
+    def submit(self, instance: tsp.TSPInstance,
+               iterations: Optional[int] = None,
+               seed: Optional[int] = None, priority: int = 0,
+               deadline: Optional[float] = None,
+               hyper: Union[aco.Hyper, dict, None] = None) -> int:
+        """Queue a request; returns its id.  Raises AdmissionError when the
+        waiting queue is full (backpressure) — resident slots don't count,
+        only un-admitted requests."""
+        if self.max_waiting is not None and \
+                len(self._waiting) >= self.max_waiting:
+            self._rejected += 1
+            raise AdmissionError(
+                f"waiting queue full ({len(self._waiting)} >= "
+                f"{self.max_waiting})")
+        its = iterations if iterations is not None else self.cfg.iterations
+        if its < 1:
+            raise ValueError(f"iterations {its} < 1")
+        if hyper is not None and not self.per_instance_hyper:
+            raise ValueError("per-request hyper requires "
+                             "per_instance_hyper=True")
+        if self.per_instance_hyper:
+            if isinstance(hyper, dict):
+                hyper = aco.Hyper.make(self.cfg, **hyper)
+            elif hyper is None:
+                hyper = aco.Hyper.make(self.cfg)
+        rid = self._next_id
+        self._next_id += 1
+        now = time.perf_counter()
+        if self._t_first_submit is None:
+            self._t_first_submit = now
+        req = StreamRequest(
+            request_id=rid, instance=instance, iterations=its,
+            seed=seed if seed is not None else self.cfg.seed + rid,
+            priority=priority, deadline=deadline, hyper=hyper,
+            submitted_at=now)
+        # Prep the padded problem + initial state at enqueue time (so
+        # refill surgery on the stepping critical path is only .at[ix].set)
+        # — but only within the bounded look-ahead window.
+        if len(self._waiting) < self.prep_ahead:
+            req.prep(batch_mod.bucket_size(instance.n, self.min_bucket),
+                     self.cfg, self.cfg.nn_k)
+        self._waiting.append(req)
+        self._submitted += 1
+        return rid
+
+    @property
+    def waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def resident(self) -> int:
+        return sum(p.occupied for p in self._pools.values())
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._waiting) or self.resident > 0
+
+    # ---------------------------------------------------------- admission
+    def _pool(self, bucket: int) -> StreamingPool:
+        if bucket not in self._pools:
+            self._pools[bucket] = StreamingPool(
+                bucket, self.max_batch, self.cfg, self.patience,
+                per_instance_hyper=self.per_instance_hyper)
+        return self._pools[bucket]
+
+    def _admit(self) -> int:
+        """Move waiting requests (priority desc, deadline asc, arrival)
+        into free slots of their bucket's pool.  Returns #admitted."""
+        if not self._waiting:
+            return 0
+        self._waiting.sort(key=StreamRequest.order_key)
+        fills: dict[int, list[tuple[int, StreamRequest]]] = {}
+        free: dict[int, list[int]] = {}
+        leftover: list[StreamRequest] = []
+        for req in self._waiting:
+            b = batch_mod.bucket_size(req.instance.n, self.min_bucket)
+            if b not in free:
+                free[b] = self._pool(b).free_slots()
+            if free[b]:
+                fills.setdefault(b, []).append((free[b].pop(0), req))
+            else:
+                leftover.append(req)
+        self._waiting = leftover
+        n = 0
+        for b, assignments in fills.items():
+            self._pools[b].fill_slots(assignments)
+            n += len(assignments)
+        # Prefetch prep for the queue head (next harvest's refills) —
+        # between chunks, not inside the surgery itself.
+        for req in leftover[:self.prep_ahead]:
+            if req.prob is None:
+                req.prep(batch_mod.bucket_size(req.instance.n,
+                                               self.min_bucket),
+                         self.cfg, self.cfg.nn_k)
+        return n
+
+    # ------------------------------------------------------------ stepping
+    def step(self) -> list[SolveResult]:
+        """One scheduler tick: admit, advance every non-empty pool by one
+        chunk, harvest.  Returns newly finished results (completion
+        order)."""
+        self._admit()
+        results: list[SolveResult] = []
+        for pool in self._pools.values():
+            if pool.occupied == 0:
+                continue
+            occ_during = pool.occupied          # slots active in this chunk
+            pool.step_chunk(self.chunk)
+            got = pool.harvest()
+            self._occ_samples.append(occ_during / pool.slots)
+            results.extend(got)
+        if results:
+            self._t_last_harvest = time.perf_counter()
+            self._completed += len(results)
+            for r in results:
+                self._latencies.append(r.latency_s)
+                self._per_bucket_done[r.bucket] = \
+                    self._per_bucket_done.get(r.bucket, 0) + 1
+        return results
+
+    def run_until_drained(self, max_steps: Optional[int] = None
+                          ) -> list[SolveResult]:
+        """Step until queue and pools are empty (or max_steps)."""
+        out: list[SolveResult] = []
+        steps = 0
+        while self.busy:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
+    # --------------------------------------------------------------- stats
+    @property
+    def stats(self) -> dict:
+        lat = self._latencies
+        wall = None
+        if self._t_first_submit is not None and \
+                self._t_last_harvest is not None:
+            wall = self._t_last_harvest - self._t_first_submit
+        return {
+            "submitted": self._submitted,
+            "rejected": self._rejected,
+            "completed": self._completed,
+            "waiting": self.waiting,
+            "resident": self.resident,
+            "chunks": sum(p.chunks for p in self._pools.values()),
+            "fills": sum(p.fills for p in self._pools.values()),
+            "slots": {str(b): p.slots for b, p in sorted(self._pools.items())},
+            "buckets": {str(b): c
+                        for b, c in sorted(self._per_bucket_done.items())},
+            "occupancy_mean": (float(np.mean(self._occ_samples))
+                               if self._occ_samples else 0.0),
+            "instances_per_s": (self._completed / wall
+                                if wall and wall > 0 else 0.0),
+            "latency_mean_s": float(np.mean(lat)) if lat else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "latency_p95_s": float(np.percentile(lat, 95)) if lat else 0.0,
+            "latency_max_s": float(np.max(lat)) if lat else 0.0,
+        }
+
+
+# ------------------------------------------------------------ trace replay
+@dataclasses.dataclass(frozen=True)
+class TraceItem:
+    """One arrival of a replayable request trace."""
+    at: float                      # seconds from replay start
+    instance: tsp.TSPInstance
+    iterations: int
+    seed: int
+    priority: int = 0
+
+
+def make_poisson_trace(num: int, rate: float, min_n: int, max_n: int,
+                       seed: int = 0,
+                       iterations: Union[int, Sequence[int]] = 20
+                       ) -> list[TraceItem]:
+    """Poisson arrivals (exponential inter-arrival at ``rate`` req/s) of
+    mixed circle/random instances; ``iterations`` may be a sequence of
+    budgets cycled deterministically over the arrivals (heterogeneous
+    stragglers are what streaming wins on)."""
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    out = []
+    for i in range(num):
+        t += float(rng.exponential(1.0 / rate))
+        n = int(rng.randint(min_n, max_n + 1))
+        inst = (tsp.circle_instance(n, seed=seed + i) if i % 2 == 0
+                else tsp.random_instance(n, seed=seed + i))
+        its = (int(iterations) if np.isscalar(iterations)
+               else int(iterations[i % len(iterations)]))
+        out.append(TraceItem(at=t, instance=inst, iterations=its,
+                             seed=seed + i))
+    return out
+
+
+def replay_trace(svc: StreamingSolverService, trace: Sequence[TraceItem]
+                 ) -> list[SolveResult]:
+    """Wall-clock replay: submit each item once its arrival time passes,
+    stepping the engine in between (mid-run admission); sleeps only when
+    the engine is idle and the next arrival is in the future.  When the
+    service's waiting queue is full (``max_waiting`` backpressure), the
+    item is held and retried after the next step drains the queue — a
+    client that waits on backpressure rather than dropping the request, so
+    the service's ``rejected`` stat is not inflated by retry spam."""
+    start = time.perf_counter()
+    i = 0
+    results: list[SolveResult] = []
+    while i < len(trace) or svc.busy:
+        now = time.perf_counter() - start
+        while i < len(trace) and trace[i].at <= now:
+            if svc.max_waiting is not None and \
+                    svc.waiting >= svc.max_waiting:
+                break          # queue full: step to drain, then retry
+            it = trace[i]
+            svc.submit(it.instance, iterations=it.iterations,
+                       seed=it.seed, priority=it.priority)
+            i += 1
+        if svc.busy:
+            results.extend(svc.step())
+        elif i < len(trace):
+            time.sleep(max(0.0, trace[i].at - (time.perf_counter() - start)))
+    return results

@@ -7,7 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import aco, strategies, tsp
+from repro.core import aco, pheromone, strategies, tsp
 from repro.solver import batch as batch_mod
 from repro.solver import engine, service
 
@@ -125,6 +125,75 @@ def test_per_instance_budgets_and_freeze():
     np.testing.assert_array_equal(np.asarray(states.iteration), [2, 8, 4, 1])
 
 
+@pytest.mark.parametrize("strategy", pheromone.STRATEGIES)
+def test_batched_vs_solo_all_deposit_strategies(strategy):
+    """Every registered deposit strategy is mask-aware inside the batched
+    engine: batched == solo bitwise, same as the scatter/reduction paths."""
+    cfg = aco.ACOConfig(iterations=4, deposit=strategy, deposit_tile=8,
+                        selection="gumbel")
+    stb, _ = engine.solve_instances(INSTS[:3], cfg, iterations=[4, 3, 4],
+                                    seeds=SEEDS[:3], n_pad=16)
+    for i, inst in enumerate(INSTS[:3]):
+        st1, _ = engine.solve_instances(
+            [inst], cfg, iterations=[[4, 3, 4][i]], seeds=[SEEDS[i]],
+            n_pad=16)
+        assert float(np.asarray(st1.best_len)[0]) == \
+            float(np.asarray(stb.best_len)[i]), (strategy, i)
+        np.testing.assert_array_equal(np.asarray(st1.best_tour)[0],
+                                      np.asarray(stb.best_tour)[i])
+
+
+@pytest.mark.parametrize("strategy", [s for s in pheromone.STRATEGIES
+                                      if s != "scatter"])
+def test_masked_deposit_strategies_match_scatter(strategy):
+    """Unit-level mask check, independent of the engine: every strategy's
+    masked deposit matrix matches the masked scatter reference (up to float
+    associativity) and puts zero mass on phantom rows/cols."""
+    inst = tsp.random_instance(13, seed=5)
+    prob = batch_mod.padded_problem(inst, 16, nn_k=8)
+    ci = strategies.choice_matrix(jnp.ones((16, 16)), prob.eta, 1.0, 2.0)
+    res = strategies.construct_tours(
+        jax.random.PRNGKey(0), prob.dist, ci, 6,
+        nn=prob.nn, n_actual=prob.n_actual)
+    w = 1.0 / res.lengths
+    ref = np.asarray(pheromone.deposit(16, res.tours, w, "scatter",
+                                       n_actual=prob.n_actual))
+    d = np.asarray(pheromone.deposit(16, res.tours, w, strategy, tile=8,
+                                     n_actual=prob.n_actual))
+    np.testing.assert_allclose(d, ref, rtol=1e-5, atol=1e-7)
+    assert (d[13:, :] == 0).all() and (d[:, 13:] == 0).all()
+
+
+@pytest.mark.parametrize("variant", ["as", "mmas", "acs"])
+def test_per_instance_hyperparams_exactness(variant):
+    """One bucket mixes alpha/beta/rho/q profiles (traced per-slot Hyper
+    operands): each instance still reproduces its solo run — same profile,
+    same seed — bitwise.  MMAS exercises the rho-dependent tau0 and clip."""
+    cfg = aco.ACOConfig(iterations=max(BUDGETS), variant=variant,
+                        selection="gumbel")
+    profiles = [aco.Hyper.make(cfg),
+                aco.Hyper.make(cfg, alpha=2.0, rho=0.3),
+                aco.Hyper.make(cfg, beta=3.0, q=2.0),
+                aco.Hyper.make(cfg, rho=0.8)]
+    stb, _ = engine.solve_instances(INSTS, cfg, iterations=BUDGETS,
+                                    seeds=SEEDS, n_pad=16, hypers=profiles)
+    for i, inst in enumerate(INSTS):
+        st1, _ = engine.solve_instances(
+            [inst], cfg, iterations=[BUDGETS[i]], seeds=[SEEDS[i]],
+            n_pad=16, hypers=[profiles[i]])
+        assert float(np.asarray(st1.best_len)[0]) == \
+            float(np.asarray(stb.best_len)[i]), (variant, i)
+        np.testing.assert_array_equal(np.asarray(st1.best_tour)[0],
+                                      np.asarray(stb.best_tour)[i])
+
+
+def test_make_batch_rejects_mixed_hyper_presence():
+    cfg = aco.ACOConfig()
+    with pytest.raises(ValueError, match="all-None or all-set"):
+        batch_mod.make_batch(INSTS[:2], 16,
+                             hypers=[aco.Hyper.make(cfg), None])
+
+
 def test_masked_local_search_improves_and_preserves_tail():
     inst = tsp.circle_instance(24, seed=9)
     prob = batch_mod.padded_problem(inst, 32, nn_k=10)
@@ -166,11 +235,14 @@ def test_service_buckets_schedules_and_stats():
         assert r.iterations == 5
 
 
-def test_service_rejects_non_mask_aware_configs():
+def test_service_rejects_unsupported_configs():
     with pytest.raises(ValueError, match="use_pallas"):
         service.SolverService(aco.ACOConfig(use_pallas=True))
-    with pytest.raises(ValueError, match="mask-aware"):
-        service.SolverService(aco.ACOConfig(deposit="s2g"))
+    with pytest.raises(ValueError, match="deposit"):
+        service.SolverService(aco.ACOConfig(deposit="nope"))
+    # every registered deposit strategy is mask-aware now
+    for s in pheromone.STRATEGIES:
+        service.SolverService(aco.ACOConfig(deposit=s))
 
 
 def test_service_checkpoint_crash_recovery(tmp_path, monkeypatch):

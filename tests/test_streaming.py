@@ -1,0 +1,209 @@
+"""Continuous-batching streaming solver tests (DESIGN.md §9).
+
+The load-bearing property is the exactness contract: any request solved
+through the streaming pool — admitted mid-run into a slot freed by a
+harvested sibling — yields bitwise the same best tour as a solo
+engine.run_batch call with the same seed.  Refill surgery must never
+perturb resident siblings, and chunked stepping must compose exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import aco, tsp
+from repro.solver import engine, streaming
+
+INSTS = (tsp.random_instance(10, seed=1), tsp.circle_instance(12, seed=2),
+         tsp.random_instance(13, seed=3), tsp.circle_instance(16, seed=4),
+         tsp.random_instance(14, seed=5))
+BUDGETS = (6, 3, 7, 4, 5)
+SEEDS = (20, 21, 22, 23, 24)
+
+
+def _solo(inst, cfg, iterations, seed, n_pad=16, hypers=None):
+    st, _ = engine.solve_instances([inst], cfg, iterations=[iterations],
+                                   seeds=[seed], n_pad=n_pad, hypers=hypers)
+    return (float(np.asarray(st.best_len)[0]),
+            np.asarray(st.best_tour)[0][:inst.n])
+
+
+# ---------------------------------------------------------------- exactness
+@pytest.mark.parametrize("variant,ls", [
+    ("as", "none"), ("mmas", "none"), ("acs", "none"), ("as", "2opt"),
+])
+def test_streaming_exactness_with_midrun_admission(variant, ls):
+    """5 requests through 2 slots with chunk=2: every slot is refilled at
+    least once mid-run, and two requests arrive while the pool is already
+    stepping.  Every result must be bitwise the solo result."""
+    cfg = aco.ACOConfig(iterations=max(BUDGETS), variant=variant,
+                        selection="gumbel", local_search=ls, ls_rounds=4)
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                           chunk=2)
+    for k in range(3):
+        svc.submit(INSTS[k], iterations=BUDGETS[k], seed=SEEDS[k])
+    results = list(svc.step()) + list(svc.step())
+    for k in range(3, 5):      # arrive mid-run, join a partially done pool
+        svc.submit(INSTS[k], iterations=BUDGETS[k], seed=SEEDS[k])
+    results.extend(svc.run_until_drained())
+
+    assert len(results) == len(INSTS)
+    assert svc.stats["fills"] == len(INSTS)    # refills actually happened
+    by_id = {r.request_id: r for r in results}
+    for k, inst in enumerate(INSTS):
+        best_len, best_tour = _solo(inst, cfg, BUDGETS[k], SEEDS[k])
+        r = by_id[k]
+        assert r.best_len == best_len, (variant, ls, k)
+        np.testing.assert_array_equal(r.best_tour, best_tour)
+        assert r.iterations == BUDGETS[k]
+        assert tsp.is_valid_tour(r.best_tour)
+
+
+def test_streaming_chunk_size_is_unobservable():
+    """The harvested result must not depend on the chunk granularity."""
+    cfg = aco.ACOConfig(iterations=max(BUDGETS), selection="gumbel")
+    outs = []
+    for chunk in (1, 3):
+        svc = streaming.StreamingSolverService(cfg, max_batch=2,
+                                               min_bucket=16, chunk=chunk)
+        for k, inst in enumerate(INSTS):
+            svc.submit(inst, iterations=BUDGETS[k], seed=SEEDS[k])
+        outs.append({r.request_id: r for r in svc.run_until_drained()})
+    for k in range(len(INSTS)):
+        assert outs[0][k].best_len == outs[1][k].best_len
+        np.testing.assert_array_equal(outs[0][k].best_tour,
+                                      outs[1][k].best_tour)
+
+
+def test_streaming_multi_bucket_pools():
+    """Requests landing in different buckets run in independent pools."""
+    cfg = aco.ACOConfig(iterations=4, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                           chunk=2)
+    sizes = (10, 20, 14, 28)
+    for i, n in enumerate(sizes):
+        svc.submit(tsp.circle_instance(n, seed=n), iterations=4, seed=i)
+    results = svc.run_until_drained()
+    assert {r.bucket for r in results} == {16, 32}
+    for r, n in zip(sorted(results, key=lambda r: r.request_id), sizes):
+        assert r.n == n and len(r.best_tour) == n
+        assert tsp.is_valid_tour(r.best_tour)
+        best_len, best_tour = _solo(
+            tsp.circle_instance(n, seed=n), cfg, 4,
+            list(sizes).index(n), n_pad=r.bucket)
+        assert r.best_len == best_len
+
+
+# ---------------------------------------------------------------- admission
+def test_admission_priority_and_deadline_order():
+    """With one slot, completion order is admission order: higher priority
+    first, then earlier deadline, then arrival."""
+    cfg = aco.ACOConfig(iterations=2, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=1, min_bucket=16,
+                                           chunk=2)
+    a = svc.submit(INSTS[0], priority=0, seed=1)
+    b = svc.submit(INSTS[1], priority=5, deadline=100.0, seed=2)
+    c = svc.submit(INSTS[2], priority=5, deadline=50.0, seed=3)
+    d = svc.submit(INSTS[3], priority=5, seed=4)   # no deadline: after b/c
+    done = [r.request_id for r in svc.run_until_drained()]
+    assert done == [c, b, d, a]
+
+
+def test_admission_backpressure_max_waiting():
+    cfg = aco.ACOConfig(iterations=2, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=1, min_bucket=16,
+                                           chunk=2, max_waiting=2)
+    svc.submit(INSTS[0], seed=1)
+    svc.submit(INSTS[1], seed=2)
+    with pytest.raises(streaming.AdmissionError):
+        svc.submit(INSTS[2], seed=3)
+    assert svc.stats["rejected"] == 1
+    # draining the queue frees admission capacity again
+    svc.run_until_drained()
+    svc.submit(INSTS[2], seed=3)
+    assert svc.waiting == 1
+
+
+def test_streaming_rejects_pallas_and_unknown_deposit():
+    with pytest.raises(ValueError, match="use_pallas"):
+        streaming.StreamingSolverService(aco.ACOConfig(use_pallas=True))
+    with pytest.raises(ValueError, match="deposit"):
+        streaming.StreamingSolverService(aco.ACOConfig(deposit="nope"))
+
+
+def test_streaming_stats_shape():
+    cfg = aco.ACOConfig(iterations=3, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                           chunk=1)
+    for k, inst in enumerate(INSTS[:3]):
+        svc.submit(inst, iterations=3, seed=k)
+    svc.run_until_drained()
+    s = svc.stats
+    assert s["submitted"] == 3 and s["completed"] == 3
+    assert s["waiting"] == 0 and s["resident"] == 0
+    assert s["fills"] == 3 and s["chunks"] >= 3
+    assert 0.0 < s["occupancy_mean"] <= 1.0
+    assert s["instances_per_s"] > 0
+    assert s["latency_p50_s"] <= s["latency_p95_s"] <= s["latency_max_s"]
+
+
+# ------------------------------------------------- per-instance hyper (§9)
+def test_streaming_mixed_hyper_profiles_exact():
+    """One pool mixes tuning profiles; each request still reproduces its
+    solo run (same profile, same seed) bitwise."""
+    cfg = aco.ACOConfig(iterations=5, variant="mmas", selection="gumbel")
+    profiles = [None, {"alpha": 2.0, "rho": 0.3}, {"beta": 3.0, "q": 2.0},
+                {"rho": 0.8}, {"alpha": 1.5, "beta": 1.0}]
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                           chunk=2, per_instance_hyper=True)
+    for k, inst in enumerate(INSTS):
+        svc.submit(inst, iterations=BUDGETS[k], seed=SEEDS[k],
+                   hyper=profiles[k])
+    results = {r.request_id: r for r in svc.run_until_drained()}
+    for k, inst in enumerate(INSTS):
+        h = aco.Hyper.make(cfg, **(profiles[k] or {}))
+        best_len, best_tour = _solo(inst, cfg, BUDGETS[k], SEEDS[k],
+                                    hypers=[h])
+        assert results[k].best_len == best_len, k
+        np.testing.assert_array_equal(results[k].best_tour, best_tour)
+
+
+def test_streaming_hyper_requires_flag():
+    svc = streaming.StreamingSolverService(aco.ACOConfig(iterations=2))
+    with pytest.raises(ValueError, match="per_instance_hyper"):
+        svc.submit(INSTS[0], hyper={"alpha": 2.0})
+
+
+# ------------------------------------------------------------ trace replay
+def test_replay_retries_on_backpressure():
+    """A bounded-queue service pushes back mid-replay; replay_trace must
+    hold items at the full-queue boundary and retry after draining instead
+    of crashing, still completing every request exactly."""
+    trace = streaming.make_poisson_trace(6, rate=1e6, min_n=10, max_n=16,
+                                         seed=4, iterations=3)
+    cfg = aco.ACOConfig(iterations=3, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=1, min_bucket=16,
+                                           chunk=3, max_waiting=1)
+    results = streaming.replay_trace(svc, trace)
+    assert len(results) == 6
+    assert svc.stats["rejected"] == 0   # client-side hold, no retry spam
+    for t, r in zip(trace, sorted(results, key=lambda r: r.request_id)):
+        best_len, _ = _solo(t.instance, cfg, t.iterations, t.seed)
+        assert r.best_len == best_len
+    with pytest.raises(ValueError, match="max_waiting"):
+        streaming.StreamingSolverService(cfg, max_waiting=0)
+
+
+def test_poisson_trace_and_replay():
+    trace = streaming.make_poisson_trace(6, rate=200.0, min_n=10, max_n=16,
+                                         seed=3, iterations=(2, 5))
+    assert len(trace) == 6
+    assert all(trace[i].at <= trace[i + 1].at for i in range(5))
+    assert {t.iterations for t in trace} <= {2, 5}
+    cfg = aco.ACOConfig(iterations=5, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                           chunk=2)
+    results = streaming.replay_trace(svc, trace)
+    assert len(results) == 6
+    for t, r in zip(trace, sorted(results, key=lambda r: r.request_id)):
+        best_len, best_tour = _solo(t.instance, cfg, t.iterations, t.seed)
+        assert r.best_len == best_len
+        np.testing.assert_array_equal(r.best_tour, best_tour)
