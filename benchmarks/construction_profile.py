@@ -1,0 +1,184 @@
+"""Construction hot-path profile: per-stage timing across kernel routes.
+
+Mirrors the paper's stage breakdown (tour construction vs pheromone
+update — the two kernels its Tables II/III time separately) for the
+post-overhaul routes:
+
+- ``dense``          pure-JAX data-parallel construction (gather full
+                     choice rows each step) + scatter deposit;
+- ``nn_list``        candidate-list construction with the *lazy* dense
+                     fallback (count-gated lax.cond — the O(m*n*k) route);
+- ``nn_list_eager``  the pre-overhaul unconditional dense fallback, kept
+                     registered purely as this regression baseline;
+- ``pallas``         the fused choice->select kernel + kernel deposit
+                     (interpret mode on CPU: validates wiring, not speed).
+
+The construction stage includes the per-iteration choice-matrix precompute
+where the route needs one (the fused kernel route doesn't — that is the
+point of fusing).
+
+Every route is compile-warmed, then timed best-of-``REPS`` (container
+wall-clock varies up to ~3x between runs; single timings are unreliable).
+
+**Regression assertion** (ISSUE 4 satellite): for n >= 256 the lazy
+``nn_list`` route must be >= ``MIN_NN_SPEEDUP`` x the eager baseline in
+iterations/sec — if the unconditional dense fallback ever silently
+returns, this benchmark fails loudly rather than drifting.
+
+Emits ``BENCH_construction.json`` at the repo root.
+
+    PYTHONPATH=src python benchmarks/construction_profile.py [--full] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aco, pheromone, strategies, tsp
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_construction.json")
+
+SIZES = (64, 256)
+FULL_SIZES = (64, 256, 1024)
+REPS = 5
+NN_K = 20
+MIN_NN_SPEEDUP = 1.3   # lazy nn_list vs eager baseline, n >= 256
+
+ROUTES = ("dense", "nn_list", "nn_list_eager", "pallas")
+
+
+def _ants(n: int) -> int:
+    # paper uses m = n; cap for the CPU-interpret benchmark so n=1024
+    # stays in minutes (the stage *split* is what this table reports)
+    return min(n, 256)
+
+
+def _setup(n: int):
+    inst = tsp.circle_instance(n, seed=7)
+    prob = aco.make_problem(inst, nn_k=min(NN_K, n - 1))
+    tau = jnp.full((n, n), aco.initial_tau(inst, aco.ACOConfig()),
+                   jnp.float32)
+    return prob, tau
+
+
+def _construct_fn(route: str, prob, tau, n: int):
+    """Returns a nullary stage function: one full tour construction."""
+    m = _ants(n)
+    key = jax.random.PRNGKey(1)
+    if route == "pallas":
+        def fn():
+            # fused route: no choice-matrix precompute at all
+            res = strategies.construct_tours(
+                key, prob.dist, jnp.zeros((1, 1), jnp.float32), m,
+                method="fused", selection="iroulette",
+                tau=tau, eta=prob.eta)
+            return res.lengths.block_until_ready()
+        return fn
+    method = {"dense": "data_parallel"}.get(route, route)
+
+    def fn():
+        ci = strategies.choice_matrix(tau, prob.eta, 1.0, 2.0)
+        res = strategies.construct_tours(
+            key, prob.dist, ci, m, method=method, selection="iroulette",
+            nn=prob.nn, tau=tau, eta=prob.eta)
+        return res.lengths.block_until_ready()
+    return fn
+
+
+def _pheromone_fn(route: str, prob, tau, n: int):
+    """Returns a nullary stage function: one full AS deposit."""
+    m = _ants(n)
+    tours = jnp.stack([jnp.roll(jnp.arange(n, dtype=jnp.int32), i)
+                       for i in range(m)])
+    w = jnp.full((m,), 0.01, jnp.float32)
+    if route == "pallas":
+        from repro.kernels import ops as kops
+
+        def fn():
+            return kops.pheromone_update(tau, tours, w,
+                                         0.5).block_until_ready()
+        return fn
+
+    def fn():
+        return pheromone.update(tau, tours, w, 0.5,
+                                strategy="scatter").block_until_ready()
+    return fn
+
+
+def _best_of(fn, reps: int = REPS) -> float:
+    fn()                       # compile warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(sizes=SIZES, out: str = DEFAULT_OUT) -> dict:
+    rows = {}
+    print(f"{'n':>6} {'route':>14} {'construct_s':>12} {'pheromone_s':>12} "
+          f"{'iter/s':>8}")
+    for n in sizes:
+        prob, tau = _setup(n)
+        rows[str(n)] = {}
+        for route in ROUTES:
+            if route == "pallas" and n > 512:
+                # interpret-mode kernels at n=1024 are compile-bound on
+                # CPU; the wiring is already validated at smaller n.
+                continue
+            tc = _best_of(_construct_fn(route, prob, tau, n))
+            tp = _best_of(_pheromone_fn(route, prob, tau, n))
+            ips = 1.0 / (tc + tp)
+            rows[str(n)][route] = {
+                "construct_s": tc,
+                "pheromone_s": tp,
+                "construct_frac": tc / (tc + tp),
+                "iter_per_s": ips,
+            }
+            print(f"{n:>6} {route:>14} {tc:>12.4f} {tp:>12.4f} {ips:>8.2f}")
+
+    speedups = {}
+    for n in sizes:
+        r = rows[str(n)]
+        su = r["nn_list"]["iter_per_s"] / r["nn_list_eager"]["iter_per_s"]
+        speedups[str(n)] = su
+        print(f"n={n}: lazy nn_list speedup vs eager fallback = {su:.2f}x")
+
+    payload = {
+        "sizes": list(sizes),
+        "ants": {str(n): _ants(n) for n in sizes},
+        "nn_k": NN_K,
+        "reps": REPS,
+        "stages": rows,
+        "nn_lazy_speedup": speedups,
+        "min_nn_speedup_required": MIN_NN_SPEEDUP,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}")
+
+    # regression gate: the lazy fallback must not silently regress to the
+    # eager dense path (ISSUE 4 — candidate lists must buy their win back)
+    for n in sizes:
+        if n >= 256:
+            assert speedups[str(n)] >= MIN_NN_SPEEDUP, (
+                f"lazy nn_list construction is only "
+                f"{speedups[str(n)]:.2f}x the eager dense-fallback "
+                f"baseline at n={n} (required >= {MIN_NN_SPEEDUP}x): the "
+                f"count-gated lax.cond fallback has regressed")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    main(FULL_SIZES if args.full else SIZES, args.out)

@@ -11,9 +11,10 @@ import argparse
 import sys
 import time
 
-from . import (fig4_overall, fig5_pheromone, local_search, quality, roofline,
-               solver_throughput, streaming_throughput,
-               table2_tour_construction, table3_pheromone)
+from . import (construction_profile, fig4_overall, fig5_pheromone,
+               local_search, quality, roofline, solver_throughput,
+               streaming_throughput, table2_tour_construction,
+               table3_pheromone)
 
 TABLES = {
     "table2": lambda full: table2_tour_construction.main(
@@ -27,6 +28,9 @@ TABLES = {
     "quality": lambda full: quality.main(),
     "local_search": lambda full: local_search.main(
         local_search.FULL_SIZES if full else local_search.SIZES),
+    "construction": lambda full: construction_profile.main(
+        construction_profile.FULL_SIZES if full
+        else construction_profile.SIZES),
     "solver": lambda full: solver_throughput.main(
         solver_throughput.CASES if full else solver_throughput.SMOKE_CASES),
     "streaming": lambda full: streaming_throughput.main(

@@ -30,7 +30,11 @@ def main() -> None:
           f"gap={gap:.2f}%  ({dt:.1f}s, {cfg.iterations} iters)")
     assert tsp.is_valid_tour(np.asarray(state.best_tour))
 
-    # Same engine, Pallas kernels for choice/tour/pheromone stages.
+    # Same engine on the kernel route: construction runs the fused
+    # choice->select kernel (row gather + tau^a*eta^b + masking + selection
+    # in one pass, no (n, n) choice precompute) and the deposit runs the
+    # one-hot-matmul pheromone kernel.  Constructed tours are bitwise the
+    # data-parallel route's (DESIGN.md §10).
     cfg_k = aco.ACOConfig(iterations=80, use_pallas=True)
     state_k = aco.run(inst, cfg_k)
     gap_k = 100 * (float(state_k.best_len) / inst.known_optimum - 1)

@@ -148,10 +148,14 @@ def init_colony(instance: tsp.TSPInstance, cfg: ACOConfig,
     )
 
 
-def _choice(tau: Array, eta: Array, cfg: ACOConfig, alpha, beta) -> Array:
+def _choice(tau: Array, eta: Array, cfg: ACOConfig, alpha, beta,
+            n_actual: Optional[Array] = None) -> Array:
     if cfg.use_pallas:
+        # alpha/beta are the hyper-resolved values; on the kernel route
+        # check_kernel_route has already guaranteed they are the static
+        # config floats (traced Hyper exponents are rejected upstream).
         from repro.kernels import ops as kops
-        return kops.choice_info(tau, eta, cfg.alpha, cfg.beta)
+        return kops.choice_info(tau, eta, alpha, beta, n_actual)
     return strategies.choice_matrix(tau, eta, alpha, beta)
 
 
@@ -218,26 +222,32 @@ def colony_step(problem: Problem, state: ColonyState,
     n = problem.dist.shape[0]
     m = cfg.num_ants(n)
     n_act = problem.n_actual           # None, or traced () int32 (padded)
-    if n_act is not None and cfg.use_pallas:
-        raise NotImplementedError(
-            "use_pallas is not mask-aware yet; padded instances (solver/) "
-            "run the pure-JAX path")
     h = problem.hyper                  # None, or traced per-instance Hyper
-    if h is not None and cfg.use_pallas:
-        raise NotImplementedError(
-            "use_pallas kernels take static alpha/beta; per-instance Hyper "
-            "operands run the pure-JAX path")
+    if cfg.use_pallas:
+        # Masked (padded) instances are kernel-supported; per-instance
+        # Hyper operands are not (static kernel exponents) — one typed
+        # rejection point for the whole kernel route (DESIGN.md §10).
+        from repro.kernels import ops as kops
+        kops.check_kernel_route(masked=n_act is not None,
+                                hyper=h is not None)
     alpha = cfg.alpha if h is None else h.alpha
     beta = cfg.beta if h is None else h.beta
     rho = cfg.rho if h is None else h.rho
     q = cfg.q if h is None else h.q
     key, k_tour = jax.random.split(state.key)
 
-    choice_info = _choice(state.tau, problem.eta, cfg, alpha, beta)
-
     method = cfg.construction
     if cfg.use_pallas and method == "data_parallel":
-        method = "pallas"          # kernels/tour_select via the step registry
+        # kernels/fused_select: the whole construction step (gather,
+        # weighting, masking, selection) is one kernel — no (n, n) choice
+        # precompute on this route at all.
+        method = "fused"
+
+    if method == "fused":
+        choice_info = jnp.zeros((1, 1), jnp.float32)   # unused by the step
+    else:
+        choice_info = _choice(state.tau, problem.eta, cfg, alpha, beta,
+                              n_act)
 
     res = strategies.construct_tours(
         k_tour, problem.dist, choice_info, m,
@@ -276,7 +286,8 @@ def colony_step(problem: Problem, state: ColonyState,
 
     if cfg.use_pallas:
         from repro.kernels import ops as kops
-        tau = kops.pheromone_update(state.tau, dep_tours, dep_w, cfg.rho)
+        tau = kops.pheromone_update(state.tau, dep_tours, dep_w, rho,
+                                    n_actual=n_act)
     else:
         tau = pheromone.update(state.tau, dep_tours, dep_w, rho,
                                strategy=cfg.deposit, tile=cfg.deposit_tile,

@@ -57,9 +57,14 @@ def tour_edges(tours: Array,
     return tours, t
 
 
-def _edge_weights(tours: Array, w: Array,
-                  n_actual: Optional[Array] = None) -> Array:
-    """(m*n,) per-edge deposit weights; phantom-tail edges masked to 0."""
+def edge_weights(tours: Array, w: Array,
+                 n_actual: Optional[Array] = None) -> Array:
+    """(m*n,) per-edge deposit weights; phantom-tail edges masked to 0.
+
+    Public alongside ``tour_edges``: the kernel deposit wrapper
+    (kernels/ops.pheromone_update) builds its edge stream with the same
+    pair, so the kernel and pure-JAX routes share one edge semantics.
+    """
     ns = tours.shape[-1]
     wrep = jnp.broadcast_to(w[:, None], (w.shape[0], ns))
     if n_actual is not None:
@@ -72,7 +77,7 @@ def deposit_scatter(n: int, tours: Array, w: Array, symmetric: bool = True,
                     n_actual: Optional[Array] = None) -> Array:
     """Atomic-analogue scatter-add (paper versions 1/2)."""
     f, t = tour_edges(tours, n_actual)
-    wrep = _edge_weights(tours, w, n_actual)
+    wrep = edge_weights(tours, w, n_actual)
     d = jnp.zeros((n, n), jnp.float32).at[f.ravel(), t.ravel()].add(wrep)
     if symmetric:
         d = d + d.T
@@ -85,7 +90,7 @@ def deposit_reduction(n: int, tours: Array, w: Array,
     f, t = tour_edges(tours, n_actual)
     lo = jnp.minimum(f, t)
     hi = jnp.maximum(f, t)
-    wrep = _edge_weights(tours, w, n_actual)
+    wrep = edge_weights(tours, w, n_actual)
     upper = jnp.zeros((n, n), jnp.float32).at[lo.ravel(), hi.ravel()].add(wrep)
     return upper + upper.T
 
@@ -111,7 +116,7 @@ def deposit_s2g(n: int, tours: Array, w: Array, row_tile: int = 0,
     # pad n up to multiples
     ni = -(-n // bi) * bi
     nj = -(-n // bj) * bj
-    fw = (f.ravel(), _edge_weights(tours, w, n_actual))
+    fw = (f.ravel(), edge_weights(tours, w, n_actual))
     tr = t.ravel()
 
     def row_block(i0):
@@ -143,7 +148,7 @@ def deposit_onehot(n: int, tours: Array, w: Array, chunk: int = 8,
     """
     f, t = tour_edges(tours, n_actual)
     m, ns = f.shape
-    we = _edge_weights(tours, w, n_actual).reshape(m, ns)
+    we = edge_weights(tours, w, n_actual).reshape(m, ns)
     c = min(chunk, m)
     pad = (-m) % c
     if pad:

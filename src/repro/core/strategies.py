@@ -108,10 +108,25 @@ def _make_recompute_step(selector: str) -> StepImpl:
     return step
 
 
-def _make_nn_step(selector: str) -> StepImpl:
+def _make_nn_step(selector: str, lazy: bool = True) -> StepImpl:
     """NN-list construction: sample among unvisited candidates; if the whole
     candidate set is visited, fall back to the best unvisited city by choice
-    value (paper §II: 'selects the best neighbour according to eq. 1')."""
+    value (paper §II: 'selects the best neighbour according to eq. 1').
+
+    ``lazy`` (the default) gates the dense O(m*n) fallback behind a
+    count-gated ``lax.cond``: the (m, n) row gather + argmax only runs on
+    steps where at least one ant has exhausted its candidate set, so an
+    iteration costs O(m*n*k) + (fallback steps) * O(m*n) instead of an
+    unconditional O(m*n^2) — the asymptotic win candidate lists exist for.
+    Under vmap (solver/engine.run_batch batches colony_step) cond lowers to
+    select and both branches run every step; the lazy win applies to solo /
+    island colonies, which is where the paper's Table II measurement lives.
+    ``lazy=False`` keeps the pre-overhaul unconditional fallback, registered
+    as ``nn_list_eager`` purely as the regression baseline for
+    benchmarks/construction_profile.py.  Both variants are bitwise
+    identical in output — the fallback value is only consumed where
+    ``have`` is False.
+    """
     sel = sampling.SELECTORS[selector]
 
     def step(key, choice_info, st, t, extras):
@@ -126,8 +141,16 @@ def _make_nn_step(selector: str) -> StepImpl:
         have = wc.sum(-1) > 0
         local = sel(key, wc)                                # (m,) in [0, k)
         nxt_nn = cand[ants, local]
-        w_full = choice_info[st.cur] * (~st.visited)
-        nxt_fb = jnp.argmax(w_full, axis=-1).astype(jnp.int32)
+
+        def dense_fallback(_):
+            w_full = choice_info[st.cur] * (~st.visited)    # (m, n)
+            return jnp.argmax(w_full, axis=-1).astype(jnp.int32)
+
+        if lazy:
+            nxt_fb = jax.lax.cond(jnp.all(have), lambda _: nxt_nn,
+                                  dense_fallback, None)
+        else:
+            nxt_fb = dense_fallback(None)
         return jnp.where(have, nxt_nn, nxt_fb)
 
     return step
@@ -135,12 +158,36 @@ def _make_nn_step(selector: str) -> StepImpl:
 
 def _make_pallas_step(selector: str) -> StepImpl:
     def step(key, choice_info, st, t, extras):
-        del t, extras
+        del t
         from repro.kernels import ops as kops
         rows = choice_info[st.cur]
         u = jax.random.uniform(key, rows.shape, rows.dtype,
                                minval=1e-6, maxval=1.0)
-        return kops.tour_select(rows, st.visited, u, selector)
+        return kops.tour_select(rows, st.visited, u, selector,
+                                extras["n_actual"])
+
+    return step
+
+
+def _make_fused_step(selector: str, alpha: float, beta: float) -> StepImpl:
+    """Fused choice->select kernel step (kernels/fused_select.py): the row
+    gather, tau^alpha*eta^beta weighting, tabu/phantom masking and selection
+    run in one pass over tiles — no (m, n) weight matrix, and no (n, n)
+    choice-matrix precompute on this route (aco.colony_step skips it).
+
+    alpha/beta are static kernel parameters, so this step is built inside
+    ``_construct``'s trace (cached per static (alpha, beta) jit key) rather
+    than registered in ``_STEPS``; per-instance traced exponents are
+    rejected upstream (kernels.ops.check_kernel_route).
+    """
+    def step(key, choice_info, st, t, extras):
+        del choice_info, t
+        from repro.kernels import ops as kops
+        u = jax.random.uniform(key, st.visited.shape, jnp.float32,
+                               minval=1e-6, maxval=1.0)
+        return kops.fused_select(extras["tau"], extras["eta"], st.cur,
+                                 st.visited, u, alpha, beta,
+                                 extras["n_actual"], selector)
 
     return step
 
@@ -152,14 +199,23 @@ for _sel in sampling.SELECTORS:
         "roulette" if _sel == "iroulette" else _sel)
     _STEPS[("task_baseline", _sel)] = _make_recompute_step("roulette")
     _STEPS[("nn_list", _sel)] = _make_nn_step(_sel)
+    _STEPS[("nn_list_eager", _sel)] = _make_nn_step(_sel, lazy=False)
     _STEPS[("pallas", _sel)] = _make_pallas_step(_sel)
 
 
-@partial(jax.jit, static_argnames=("n", "method", "selection", "masked"))
+@partial(jax.jit, static_argnames=("n", "method", "selection", "masked",
+                                   "alpha_s", "beta_s"))
 def _construct(key: Array, choice_info: Array, dist: Array, start: Array,
                extras: dict, n: int, method: str,
-               selection: str, masked: bool = False) -> TourResult:
-    step_impl = _STEPS[(method, selection)]
+               selection: str, masked: bool = False,
+               alpha_s: Optional[float] = None,
+               beta_s: Optional[float] = None) -> TourResult:
+    # alpha_s/beta_s: static exponents for the fused kernel step only (its
+    # closure is built per trace; the jit cache is keyed on their values).
+    if method == "fused":
+        step_impl = _make_fused_step(selection, alpha_s, beta_s)
+    else:
+        step_impl = _STEPS[(method, selection)]
     st0 = _init_state(start, n)
     m = start.shape[0]
     ants = jnp.arange(m)
@@ -201,6 +257,11 @@ def construct_tours(
 
     choice_info: (n, n) precomputed tau^alpha * eta^beta (ignored by
     ``task_baseline``, which recomputes it row-wise each step).
+    Beyond the paper ladder, two more methods: ``fused`` (the fused
+    choice->select Pallas kernel, kernels/fused_select.py — requires
+    tau/eta and *static* alpha/beta; choice_info is ignored) and
+    ``nn_list_eager`` (the pre-overhaul unconditional dense fallback, kept
+    as the regression baseline for benchmarks/construction_profile.py).
     ``step_impl``: pass the string "pallas" via method, or a custom StepImpl
     (custom callables bypass the jit cache — fine inside an outer jit like
     aco.colony_step, slow if called repeatedly in eager mode).
@@ -240,14 +301,24 @@ def construct_tours(
 
         return _custom(kc, choice_info, dist, start, extras)
     if method not in ("data_parallel", "task_choice", "task_baseline",
-                      "nn_list", "pallas"):
+                      "nn_list", "nn_list_eager", "pallas", "fused"):
         raise ValueError(f"unknown construction method {method}")
     if method == "task_baseline":
         assert tau is not None and eta is not None
-    if method == "nn_list":
+    if method in ("nn_list", "nn_list_eager"):
         assert nn is not None
+    alpha_s = beta_s = None
+    if method == "fused":
+        assert tau is not None and eta is not None
+        if isinstance(alpha, jax.core.Tracer) or \
+                isinstance(beta, jax.core.Tracer):
+            from repro.kernels import ops as kops
+            raise kops.UnsupportedKernelRoute(
+                "fused construction kernel needs static alpha/beta; traced "
+                "per-instance exponents run the pure-JAX route")
+        alpha_s, beta_s = float(alpha), float(beta)
     return _construct(kc, choice_info, dist, start, extras, n, method,
-                      selection, masked)
+                      selection, masked, alpha_s, beta_s)
 
 
 def choice_matrix(tau: Array, eta: Array, alpha, beta) -> Array:

@@ -1,0 +1,149 @@
+"""Pallas kernel: fused choice->select construction step (DESIGN.md §10).
+
+One construction step of the data-parallel strategy ladder is, on the
+pure-JAX route, three materialised (m, n) tensors per scan step: the row
+gather ``choice_info[cur]``, the tabu mask multiply, and the stochastic
+transform fed to argmax.  This kernel fuses the whole step into one pass
+over (ant-block x city-tile) VMEM blocks:
+
+- **row gather** of tau/eta tiles by the per-ant current city, computed as
+  a one-hot MXU matmul (``onehot(cur) @ tile``) so the gather vectorises on
+  TPU (arbitrary dynamic gathers don't; the one-hot sum is exact in f32 —
+  one 1.0 per row, zeros elsewhere — so it is bitwise a gather);
+- **weighting** ``tau^alpha * eta^beta`` with the same static-integer-
+  exponent folding as ``core/strategies.choice_matrix`` (bitwise-identical
+  values to gathering a precomputed choice matrix);
+- **visited/phantom masking**: the tabu bit and a ``col < n_actual``
+  iota-compare against a scalar operand, so padded tiles (city padding and
+  the phantom tail of bucketed instances) contribute exactly-zero weight
+  (iroulette) / -inf score (gumbel, greedy);
+- **selection**: the same per-tile partial argmax + running cross-tile
+  (value, index) reduction as ``tour_select.py``.
+
+The (m, n) weight matrix is never materialised in HBM: per grid step only
+an (bm, bn) tile of it exists, in registers.  ``kernels/ref.py`` holds the
+bit-comparable oracle; ``core/strategies._make_fused_step`` wires this into
+the construction registry and ``core/aco.colony_step`` routes
+``use_pallas=True`` + ``construction="data_parallel"`` here — which also
+drops the per-iteration (n, n) choice-matrix precompute from that route
+entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .choice_info import _ipow
+from .tour_select import _transform
+
+DEFAULT_BLOCK_M = 8
+DEFAULT_BLOCK_N = 512
+
+
+def _fused_kernel(tau_ref, eta_ref, cur_ref, vis_ref, rand_ref, nact_ref,
+                  val_ref, idx_ref, *, mode: str, alpha: float, beta: float,
+                  block_n: int, n_rows: int):
+    j = pl.program_id(1)
+    cur = cur_ref[...]                                        # (bm,)
+    rows_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_rows), 1)
+    onehot = (cur[:, None] == rows_iota).astype(jnp.float32)  # (bm, n)
+    # Exact gather of the (bm, bn) tau/eta row tiles as an MXU matmul.
+    tau_rows = jax.lax.dot_general(
+        onehot, tau_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    eta_rows = jax.lax.dot_general(
+        onehot, eta_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    w = _ipow(tau_rows, alpha) * _ipow(eta_rows, beta)        # (bm, bn)
+
+    cols = j * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, w.shape, 1)                                # (bm, bn)
+    n_act = nact_ref[0, 0]
+    mask = ((vis_ref[...] == 0) & (cols < n_act)).astype(w.dtype)
+    v = _transform(w, mask, rand_ref[...], mode)
+
+    tile_val = jnp.max(v, axis=1)
+    local = jnp.argmax(v, axis=1).astype(jnp.int32)           # first max
+    tile_idx = local + j * block_n
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = tile_val
+        idx_ref[...] = tile_idx
+
+    @pl.when(j > 0)
+    def _update():
+        cur_val = val_ref[...]
+        cur_idx = idx_ref[...]
+        better = tile_val > cur_val           # strict: first tile wins ties
+        val_ref[...] = jnp.where(better, tile_val, cur_val)
+        idx_ref[...] = jnp.where(better, tile_idx, cur_idx)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "alpha", "beta", "block_m", "block_n",
+                     "interpret"),
+)
+def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
+                 visited: jax.Array, rand: jax.Array,
+                 alpha: float = 1.0, beta: float = 2.0,
+                 n_actual: jax.Array | None = None,
+                 mode: str = "iroulette",
+                 block_m: int = DEFAULT_BLOCK_M,
+                 block_n: int = DEFAULT_BLOCK_N,
+                 interpret: bool = True) -> jax.Array:
+    """tau/eta (n, n); cur (m,) i32; visited/rand (m, n).  -> (m,) i32.
+
+    ``n_actual``: optional traced () scalar; cities >= n_actual (phantom
+    tail of a padded instance) are never selected.  City padding added here
+    for non-divisible tiles is masked the same way, so any block size gives
+    the same selection; ant padding is sliced off.
+    """
+    m, n = visited.shape
+    bm = min(block_m, max(m, 1))
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    visited = visited.astype(jnp.int8)
+    if pad_m:
+        cur = jnp.pad(cur, (0, pad_m))
+        visited = jnp.pad(visited, ((0, pad_m), (0, 0)), constant_values=1)
+        rand = jnp.pad(rand, ((0, pad_m), (0, 0)), constant_values=1.0)
+    if pad_n:
+        tau = jnp.pad(tau, ((0, 0), (0, pad_n)))
+        eta = jnp.pad(eta, ((0, 0), (0, pad_n)))
+        visited = jnp.pad(visited, ((0, 0), (0, pad_n)), constant_values=1)
+        rand = jnp.pad(rand, ((0, 0), (0, pad_n)), constant_values=1.0)
+    n_act = jnp.asarray(n if n_actual is None else n_actual,
+                        jnp.int32).reshape(1, 1)
+    mp, np_ = visited.shape
+    gm, gn = mp // bm, np_ // bn
+    val, idx = pl.pallas_call(
+        functools.partial(_fused_kernel, mode=mode, alpha=float(alpha),
+                          beta=float(beta), block_n=bn, n_rows=n),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((n, bn), lambda i, j: (0, j)),    # tau column tile
+            pl.BlockSpec((n, bn), lambda i, j: (0, j)),    # eta column tile
+            pl.BlockSpec((bm,), lambda i, j: (i,)),        # cur
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # visited
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # rand
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # n_actual
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tau.astype(jnp.float32), eta.astype(jnp.float32),
+      cur.astype(jnp.int32), visited, rand.astype(jnp.float32), n_act)
+    del val
+    return idx[:m]

@@ -2,15 +2,26 @@
 
 ``INTERPRET`` is True on CPU (kernel bodies execute in Python for
 validation) and flips to False on a real TPU backend automatically.
+
+Every wrapper is mask-aware: ``n_actual`` (a traced () int32 scalar, the
+real-city count of a padded instance — DESIGN.md §8) threads through to the
+kernels, where padded tiles and phantom cities contribute exactly-zero
+weight / deposit / -inf score.  The one kernel route that remains
+genuinely unsupported — per-instance ``aco.Hyper`` operands, whose traced
+alpha/beta exponents cannot be static kernel parameters — raises
+``UnsupportedKernelRoute`` from ``check_kernel_route`` (the single typed
+rejection point; DESIGN.md §10 has the support matrix).
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import choice_info as _ci
+from . import fused_select as _fs
 from . import pheromone_update as _pu
 from . import tour_select as _ts
 from . import two_opt as _to
@@ -23,14 +34,51 @@ def _interpret_default() -> bool:
 INTERPRET = _interpret_default()
 
 
+class UnsupportedKernelRoute(NotImplementedError):
+    """A config/problem combination the kernels genuinely cannot serve."""
+
+
+def check_kernel_route(masked: bool = False, hyper: bool = False) -> None:
+    """Validate that the kernel route supports this problem shape.
+
+    Support matrix (DESIGN.md §10): masked (padded) instances are fully
+    supported; per-instance Hyper operands are not — kernel exponents
+    alpha/beta are static compile-time parameters, a traced per-slot
+    exponent has no kernel specialisation to dispatch to.
+    """
+    del masked  # supported everywhere since the mask-aware route overhaul
+    if hyper:
+        raise UnsupportedKernelRoute(
+            "use_pallas=True cannot serve per-instance Hyper operands: "
+            "kernel alpha/beta are static compile-time parameters, but "
+            "Hyper carries traced per-instance exponents. Run the "
+            "pure-JAX route (use_pallas=False) for per-instance "
+            "hyperparameters, or drop Problem.hyper.")
+
+
 def choice_info(tau: jax.Array, eta: jax.Array, alpha: float = 1.0,
-                beta: float = 2.0) -> jax.Array:
-    return _ci.choice_info(tau, eta, alpha, beta, interpret=INTERPRET)
+                beta: float = 2.0,
+                n_actual: Optional[jax.Array] = None) -> jax.Array:
+    return _ci.choice_info(tau, eta, alpha, beta, n_actual,
+                           interpret=INTERPRET)
 
 
 def tour_select(rows: jax.Array, visited: jax.Array, rand: jax.Array,
-                mode: str = "iroulette") -> jax.Array:
-    return _ts.tour_select(rows, visited, rand, mode, interpret=INTERPRET)
+                mode: str = "iroulette",
+                n_actual: Optional[jax.Array] = None) -> jax.Array:
+    return _ts.tour_select(rows, visited, rand, mode, n_actual,
+                           interpret=INTERPRET)
+
+
+def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
+                 visited: jax.Array, rand: jax.Array,
+                 alpha: float = 1.0, beta: float = 2.0,
+                 n_actual: Optional[jax.Array] = None,
+                 mode: str = "iroulette") -> jax.Array:
+    """Fused construction step: row gather + tau^a*eta^b + mask + select,
+    without materialising the (m, n) weight matrix (kernels/fused_select)."""
+    return _fs.fused_select(tau, eta, cur, visited, rand, alpha, beta,
+                            n_actual, mode, interpret=INTERPRET)
 
 
 def tour_select_step(selection: str = "iroulette"):
@@ -47,12 +95,21 @@ def tour_select_step(selection: str = "iroulette"):
 
 
 def pheromone_update(tau: jax.Array, tours: jax.Array, w: jax.Array,
-                     rho: float) -> jax.Array:
-    """Symmetric fused update from (m, n) tours + (m,) weights."""
-    frm = tours.ravel()
-    to = jnp.roll(tours, -1, axis=-1).ravel()
-    ns = tours.shape[-1]
-    wrep = jnp.repeat(w, ns)
+                     rho: float,
+                     n_actual: Optional[jax.Array] = None) -> jax.Array:
+    """Symmetric fused update from (m, n) tours + (m,) weights.
+
+    Mask-aware: with ``n_actual`` the closing edge wraps at position
+    n_actual-1 and phantom-tail edges carry weight exactly 0, so padded
+    tours deposit identically to their trimmed real tours (the same edge
+    semantics as core.pheromone.tour_edges/edge_weights — reused here so
+    the kernel and pure-JAX routes can never drift).
+    """
+    from repro.core import pheromone as _ph   # lazy: kernels stay core-free
+    f, t = _ph.tour_edges(tours, n_actual)
+    frm = f.ravel()
+    to = t.ravel()
+    wrep = _ph.edge_weights(tours, w, n_actual)
     # both directions for the symmetric TSP
     f2 = jnp.concatenate([frm, to])
     t2 = jnp.concatenate([to, frm])
@@ -68,6 +125,11 @@ def pheromone_update_edges(tau: jax.Array, frm: jax.Array, to: jax.Array,
 def two_opt_best(add1: jax.Array, add2: jax.Array, rem1: jax.Array,
                  rem2: jax.Array, valid: jax.Array, thr: float = 0.0,
                  mode: str = "best") -> tuple[jax.Array, jax.Array]:
-    """Per-ant best/first 2-opt move over (m, M) gathered move operands."""
+    """Per-ant best/first 2-opt move over (m, M) gathered move operands.
+
+    Mask-awareness lives in ``valid``: core.localsearch builds it with
+    phantom-touching moves already zeroed (their inf/NaN deltas never
+    reach the reduction), so padded tiles contribute +inf delta only.
+    """
     return _to.two_opt_best(add1, add2, rem1, rem2, valid, thr=float(thr),
                             mode=mode, interpret=INTERPRET)

@@ -14,6 +14,15 @@ evaporation is fused for free.
 
 Grid: (n/bi, n/bj, E/be). Edge padding uses endpoint -1 (matches no city).
 Symmetric deposit is handled by the wrapper duplicating reversed edges.
+
+Masking contract (padded instances, DESIGN.md §10): the kernel itself is
+mask-complete through its edge stream — a phantom-tail edge arrives with
+weight exactly 0 (contributing an exact 0 to the accumulator) and padded
+edge slots arrive as -1 endpoints (matching no row/column).  The
+``ops.pheromone_update`` wrapper builds that stream with
+``core.pheromone.tour_edges``/``edge_weights`` (closing edge wraps at
+position n_actual-1), so the kernel and pure-JAX deposits share one edge
+semantics and cannot drift.
 """
 from __future__ import annotations
 

@@ -22,8 +22,12 @@ def choice_info(tau: jax.Array, eta: jax.Array, alpha: float,
 
 
 def tour_select(rows: jax.Array, visited: jax.Array, rand: jax.Array,
-                mode: str = "iroulette") -> jax.Array:
+                mode: str = "iroulette",
+                n_actual: jax.Array | None = None) -> jax.Array:
     mask = (visited == 0).astype(rows.dtype)
+    if n_actual is not None:
+        cols = jnp.arange(rows.shape[-1], dtype=jnp.int32)
+        mask = mask * (cols < n_actual).astype(rows.dtype)
     if mode == "iroulette":
         v = rows * rand * mask
     elif mode == "gumbel":
@@ -35,6 +39,18 @@ def tour_select(rows: jax.Array, visited: jax.Array, rand: jax.Array,
     else:
         raise ValueError(mode)
     return jnp.argmax(v, axis=-1).astype(jnp.int32)
+
+
+def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
+                 visited: jax.Array, rand: jax.Array,
+                 alpha: float = 1.0, beta: float = 2.0,
+                 n_actual: jax.Array | None = None,
+                 mode: str = "iroulette") -> jax.Array:
+    """Oracle for the fused choice->select step: gather tau/eta rows by
+    ``cur``, weight tau^alpha * eta^beta, mask visited + phantom cities,
+    select.  Bitwise what gathering a precomputed choice matrix gives."""
+    rows = choice_info(tau, eta, alpha, beta)[cur]
+    return tour_select(rows, visited, rand, mode, n_actual)
 
 
 def select_move(delta: jax.Array, valid: jax.Array, thr: float = 0.0,

@@ -22,6 +22,13 @@ The gathers that build the operand tensors stay in the wrapper (XLA): on TPU
 arbitrary dynamic gathers don't vectorise inside a kernel, while the delta
 arithmetic + reduction — the O(m * n * k) hot loop — runs tile-by-tile in
 VMEM.  Bit-comparable to kernels/ref.py::two_opt_best in f32.
+
+Masking contract (padded instances, DESIGN.md §10): phantom-touching moves
+reach this kernel with valid=0 — core.localsearch._two_opt_operands zeroes
+them before the reduction — so their inf/NaN deltas are replaced by +inf
+(mode="best") or excluded from the improving set (mode="first") inside the
+tile; tile padding added here carries valid=0 the same way.  A padded tour
+therefore selects exactly the move its trimmed real tour would.
 """
 from __future__ import annotations
 

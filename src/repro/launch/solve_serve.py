@@ -71,6 +71,9 @@ def main() -> None:
     ap.add_argument("--patience", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route choice/construction/deposit through the "
+                         "mask-aware Pallas kernels (interpret mode on CPU)")
     # streaming mode (continuous batching, DESIGN.md §9)
     ap.add_argument("--stream", action="store_true",
                     help="replay a Poisson arrival trace through the "
@@ -85,7 +88,8 @@ def main() -> None:
 
     cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
                         selection=args.selection,
-                        local_search=args.local_search, seed=args.seed)
+                        local_search=args.local_search, seed=args.seed,
+                        use_pallas=args.use_pallas)
 
     if args.stream:
         if args.checkpoint_dir:

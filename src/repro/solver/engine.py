@@ -17,7 +17,7 @@ mask keys off each instance's own absolute iteration counter.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -29,6 +29,23 @@ from repro.core import aco, tsp
 from . import batch as batch_mod
 
 Array = jax.Array
+
+_donation_warning_handled = False
+
+
+def _quiet_cpu_donation_warning() -> None:
+    """Buffer donation is a no-op on CPU (XLA:CPU can't alias); the
+    one-line warning per compile would otherwise spam every chunked run.
+    Installed lazily on the first donating call — not at import, which
+    would lock the JAX backend early — and only on CPU: on TPU the same
+    warning signals real aliasing breakage and must stay visible."""
+    global _donation_warning_handled
+    if _donation_warning_handled:
+        return
+    _donation_warning_handled = True
+    if jax.default_backend() == "cpu":
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
 
 
 def init_state(instance: tsp.TSPInstance, cfg: aco.ACOConfig, seed: int,
@@ -65,22 +82,10 @@ def init_states(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_iters", "patience"))
-def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
-              cfg: aco.ACOConfig, max_iters: int, patience: int = 0,
-              since: Optional[Array] = None
-              ) -> tuple[aco.ColonyState, Array]:
-    """Advance B colonies by up to ``max_iters`` more iterations each.
-
-    budgets: (B,) int32 *absolute* per-instance iteration targets, compared
-    against ColonyState.iteration — so chunked calls (the checkpointing
-    service) compose exactly with one long call.
-    patience: static; >0 additionally stops an instance after that many
-    consecutive non-improving iterations.
-    since: (B,) int32 consecutive-non-improving counters from a previous
-    chunk (defaults to zero); returned updated so chunked patience runs
-    compose exactly — the service checkpoints it next to the ColonyState.
-    """
+def _run_batch_impl(problem: aco.Problem, states: aco.ColonyState,
+                    budgets: Array, cfg: aco.ACOConfig, max_iters: int,
+                    patience: int, since: Array
+                    ) -> tuple[aco.ColonyState, Array]:
     step = jax.vmap(lambda p, s: aco.colony_step(p, s, cfg)[0])
 
     def done_mask(st: aco.ColonyState, since: Array) -> Array:
@@ -107,11 +112,48 @@ def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
         since = jnp.where(active, jnp.where(improved, 0, since + 1), since)
         return merged, since, it + 1
 
-    if since is None:
-        since = jnp.zeros_like(budgets)
     states, since, _ = jax.lax.while_loop(
         cond, body, (states, since, jnp.int32(0)))
     return states, since
+
+
+_STATIC = ("cfg", "max_iters", "patience")
+_run_batch_jit = jax.jit(_run_batch_impl, static_argnames=_STATIC)
+# Donating variant: the incoming stacked ColonyState (arg 1) and stagnation
+# counters (arg 6) alias the outputs, so a resident pool's chunk step
+# updates its state in place instead of copying the whole (B, n, n) tau
+# stack every chunk.  Donation is an XLA aliasing hint: a no-op on CPU,
+# in-place on TPU — results are identical either way.  Callers of the
+# donated route must not touch the passed-in states/since afterwards.
+_run_batch_donated = jax.jit(_run_batch_impl, static_argnames=_STATIC,
+                             donate_argnums=(1, 6))
+
+
+def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
+              cfg: aco.ACOConfig, max_iters: int, patience: int = 0,
+              since: Optional[Array] = None, donate: bool = False
+              ) -> tuple[aco.ColonyState, Array]:
+    """Advance B colonies by up to ``max_iters`` more iterations each.
+
+    budgets: (B,) int32 *absolute* per-instance iteration targets, compared
+    against ColonyState.iteration — so chunked calls (the checkpointing
+    service) compose exactly with one long call.
+    patience: static; >0 additionally stops an instance after that many
+    consecutive non-improving iterations.
+    since: (B,) int32 consecutive-non-improving counters from a previous
+    chunk (defaults to zero); returned updated so chunked patience runs
+    compose exactly — the service checkpoints it next to the ColonyState.
+    donate: donate ``states``/``since`` buffers to the call (resident-pool
+    chunk stepping, solver/streaming.py).  The caller must drop its
+    references to them afterwards: on TPU the memory is reused for the
+    outputs (DESIGN.md §10 buffer-donation contract).
+    """
+    if since is None:
+        since = jnp.zeros_like(budgets)
+    if donate:
+        _quiet_cpu_donation_warning()
+    fn = _run_batch_donated if donate else _run_batch_jit
+    return fn(problem, states, budgets, cfg, max_iters, patience, since)
 
 
 def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
@@ -136,8 +178,9 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
                              hypers=hypers)
     states = init_states(instances, cfg, sds, b.n_pad, hypers)
     budgets = jnp.asarray(its, jnp.int32)
+    # freshly-built states are never reused: safe to donate their buffers
     states, _ = run_batch(b.problem, states, budgets, cfg, int(max(its)),
-                          patience)
+                          patience, donate=True)
     return states, b
 
 

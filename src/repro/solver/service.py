@@ -66,9 +66,6 @@ class SolverService:
                  ckpt_chunk: int = 25):
         if cfg is None:
             cfg = aco.ACOConfig()
-        if cfg.use_pallas:
-            raise ValueError("SolverService requires use_pallas=False "
-                             "(padded instances run the pure-JAX path)")
         if cfg.deposit not in pheromone.STRATEGIES:
             raise ValueError(f"unknown deposit strategy {cfg.deposit!r}; "
                              f"supported: {', '.join(pheromone.STRATEGIES)}")

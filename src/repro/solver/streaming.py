@@ -157,10 +157,16 @@ class StreamingPool:
 
     # ------------------------------------------------------------ stepping
     def step_chunk(self, chunk: int) -> None:
-        """Advance every active slot by up to ``chunk`` iterations."""
+        """Advance every active slot by up to ``chunk`` iterations.
+
+        The resident stacked ColonyState and stagnation counters are
+        *donated* to the jitted chunk step: the old buffers alias the new
+        ones (in-place on TPU, copy-free), which is safe because the only
+        references — ``self.states``/``self.since`` — are immediately
+        rebound to the outputs (DESIGN.md §10)."""
         self.states, self.since = engine.run_batch(
             self.problem, self.states, self.budgets, self.cfg, chunk,
-            self.patience, self.since)
+            self.patience, self.since, donate=True)
         self.chunks += 1
 
     def harvest(self) -> list[SolveResult]:
@@ -217,10 +223,12 @@ class StreamingSolverService:
                  per_instance_hyper: bool = False):
         if cfg is None:
             cfg = aco.ACOConfig()
-        if cfg.use_pallas:
-            raise ValueError("StreamingSolverService requires "
-                             "use_pallas=False (padded instances run the "
-                             "pure-JAX path)")
+        if cfg.use_pallas and per_instance_hyper:
+            # the one genuinely unsupported kernel route (DESIGN.md §10):
+            # per-slot Hyper operands need traced exponents, kernels need
+            # static ones.  Fail eagerly with the kernels' own typed error.
+            from repro.kernels import ops as kops
+            kops.check_kernel_route(hyper=True)
         if cfg.deposit not in pheromone.STRATEGIES:
             raise ValueError(f"unknown deposit strategy {cfg.deposit!r}; "
                              f"supported: {', '.join(pheromone.STRATEGIES)}")

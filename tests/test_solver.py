@@ -236,8 +236,8 @@ def test_service_buckets_schedules_and_stats():
 
 
 def test_service_rejects_unsupported_configs():
-    with pytest.raises(ValueError, match="use_pallas"):
-        service.SolverService(aco.ACOConfig(use_pallas=True))
+    # mask-aware kernel routes: use_pallas services are supported now
+    service.SolverService(aco.ACOConfig(use_pallas=True))
     with pytest.raises(ValueError, match="deposit"):
         service.SolverService(aco.ACOConfig(deposit="nope"))
     # every registered deposit strategy is mask-aware now

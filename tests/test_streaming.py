@@ -122,9 +122,15 @@ def test_admission_backpressure_max_waiting():
     assert svc.waiting == 1
 
 
-def test_streaming_rejects_pallas_and_unknown_deposit():
-    with pytest.raises(ValueError, match="use_pallas"):
-        streaming.StreamingSolverService(aco.ACOConfig(use_pallas=True))
+def test_streaming_rejects_pallas_hyper_and_unknown_deposit():
+    from repro.kernels import ops as kops
+    # mask-aware kernel routes: plain use_pallas streaming is supported now;
+    # only per-instance Hyper operands remain kernel-incompatible (static
+    # kernel exponents) and fail eagerly with the kernels' typed error.
+    streaming.StreamingSolverService(aco.ACOConfig(use_pallas=True))
+    with pytest.raises(kops.UnsupportedKernelRoute, match="Hyper"):
+        streaming.StreamingSolverService(aco.ACOConfig(use_pallas=True),
+                                         per_instance_hyper=True)
     with pytest.raises(ValueError, match="deposit"):
         streaming.StreamingSolverService(aco.ACOConfig(deposit="nope"))
 
