@@ -12,9 +12,9 @@ import sys
 import time
 
 from . import (construction_profile, fig4_overall, fig5_pheromone,
-               local_search, quality, roofline, solver_throughput,
-               streaming_throughput, table2_tour_construction,
-               table3_pheromone)
+               local_search, quality, roofline, sharded_throughput,
+               solver_throughput, streaming_throughput,
+               table2_tour_construction, table3_pheromone)
 
 TABLES = {
     "table2": lambda full: table2_tour_construction.main(
@@ -36,6 +36,9 @@ TABLES = {
     "streaming": lambda full: streaming_throughput.main(
         streaming_throughput.CASE if full
         else streaming_throughput.SMOKE_CASE),
+    "sharded": lambda full: sharded_throughput.main(
+        sharded_throughput.CASE if full
+        else sharded_throughput.SMOKE_CASE),
     "roofline": lambda full: roofline.main(),
 }
 

@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.core import aco, tsp
-from repro.solver import SolverService, StreamingSolverService
+from repro.solver import SolverService, StreamingSolverService, data_mesh
 
 
 def main() -> None:
@@ -104,6 +104,25 @@ def main() -> None:
     print(f"[streaming solver]  occupancy={s['occupancy_mean']:.2f} "
           f"fills={s['fills']} chunks={s['chunks']} "
           f"({time.time()-t0:.1f}s)")
+
+    # Sharded solver fabric (DESIGN.md §11): the same services spread
+    # their work over a device mesh — batch jobs shard the instance axis
+    # (uneven batches are phantom-padded), streaming runs one resident
+    # pool per device — and every result stays bitwise identical to the
+    # single-device run.  On this host the mesh covers whatever devices
+    # exist (run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+    # to see D=8); on a TPU pod slice it covers the slice.
+    mesh = data_mesh()
+    sharded = SolverService(aco.ACOConfig(iterations=40, selection="gumbel"),
+                            max_batch=4, mesh=mesh)
+    for k, n in enumerate((40, 52, 64)):
+        sharded.submit(tsp.circle_instance(n, seed=k))
+    for r in sharded.run():
+        print(f"[sharded solver]    {r.name}: n={r.n} best={r.best_len:.1f} "
+              f"gap={r.gap_pct:.2f}%")
+        assert tsp.is_valid_tour(r.best_tour)
+    print(f"[sharded solver]    {sharded.stats['devices']} device(s), "
+          f"{sharded.stats['instances_per_s']:.1f} instances/s")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,16 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def make_data_mesh(devices: int | None = None) -> Mesh:
+    """1-D instance-sharding mesh over the host's first ``devices``
+    accelerators — the solver fabric's topology (DESIGN.md §11): the
+    placement layer (solver/placement.py) shards batch jobs' instance
+    axes over its ``data`` axis, and the streaming service places one
+    resident pool per device."""
+    from repro.solver.placement import data_mesh
+    return data_mesh(devices)
+
+
 def make_mesh_for(devices: int | None = None, model_parallel: int = 1,
                   pods: int = 1) -> Mesh:
     """Elastic mesh: whatever devices exist, factored (pods, dp, mp)."""

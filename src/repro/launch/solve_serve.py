@@ -8,20 +8,31 @@ Two modes:
   continuous-batching StreamingSolverService (DESIGN.md §9) — requests are
   admitted into resident slots mid-run as they arrive.
 
+``--shard`` places the solver over a 1-D device mesh (DESIGN.md §11):
+batch jobs shard their instance axis across the devices; streaming mode
+runs one resident pool per device.  ``--devices`` bounds the mesh (default
+all local devices).
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.solve_serve \
         --num-instances 8 --min-n 12 --max-n 48 --iterations 20
     PYTHONPATH=src python -m repro.launch.solve_serve --stream \
         --num-instances 8 --arrival-rate 4 --chunk 2 --iterations 10
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.solve_serve --shard \
+        --num-instances 8 --iterations 10
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import numpy as np
 
 from repro.core import aco, tsp
+from repro.kernels.ops import UnsupportedKernelRoute
+from repro.launch.mesh import make_data_mesh
 from repro.solver import (SolverService, StreamingSolverService,
                           make_poisson_trace, replay_trace)
 
@@ -74,6 +85,13 @@ def main() -> None:
     ap.add_argument("--use-pallas", action="store_true",
                     help="route choice/construction/deposit through the "
                          "mask-aware Pallas kernels (interpret mode on CPU)")
+    # multi-device fabric (placement layer, DESIGN.md §11)
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the solver over a 1-D device mesh: batch "
+                         "jobs split their instance axis across devices; "
+                         "--stream runs one resident pool per device")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="--shard: mesh size (default: all local devices)")
     # streaming mode (continuous batching, DESIGN.md §9)
     ap.add_argument("--stream", action="store_true",
                     help="replay a Poisson arrival trace through the "
@@ -84,36 +102,54 @@ def main() -> None:
                     help="--stream: iterations per scheduler tick")
     ap.add_argument("--max-waiting", type=int, default=None,
                     help="--stream: admission backpressure bound")
+    ap.add_argument("--per-instance-hyper", action="store_true",
+                    help="--stream: per-slot alpha/beta/rho/q operands so "
+                         "one bucket mixes tuning profiles (incompatible "
+                         "with --use-pallas)")
     args = ap.parse_args()
 
     cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
                         selection=args.selection,
                         local_search=args.local_search, seed=args.seed,
                         use_pallas=args.use_pallas)
+    mesh = make_data_mesh(args.devices) if args.shard else None
 
-    if args.stream:
-        if args.checkpoint_dir:
-            ap.error("--checkpoint-dir is not supported with --stream "
-                     "(streaming checkpointing is not implemented)")
-        svc = StreamingSolverService(
-            cfg, max_batch=args.max_batch, min_bucket=args.min_bucket,
-            chunk=args.chunk, patience=args.patience,
-            max_waiting=args.max_waiting)
-        trace = make_poisson_trace(args.num_instances, args.arrival_rate,
-                                   args.min_n, args.max_n, seed=args.seed,
-                                   iterations=args.iterations)
-        results = replay_trace(svc, trace)
-        _report(sorted(results, key=lambda r: r.request_id), svc.stats)
-        return
+    try:
+        if args.stream:
+            if args.checkpoint_dir:
+                ap.error("--checkpoint-dir is not supported with --stream "
+                         "(streaming checkpointing is not implemented)")
+            svc = StreamingSolverService(
+                cfg, max_batch=args.max_batch, min_bucket=args.min_bucket,
+                chunk=args.chunk, patience=args.patience,
+                max_waiting=args.max_waiting,
+                per_instance_hyper=args.per_instance_hyper, mesh=mesh)
+            trace = make_poisson_trace(args.num_instances, args.arrival_rate,
+                                       args.min_n, args.max_n,
+                                       seed=args.seed,
+                                       iterations=args.iterations)
+            results = replay_trace(svc, trace)
+            _report(sorted(results, key=lambda r: r.request_id), svc.stats)
+            return
 
-    svc = SolverService(cfg, max_batch=args.max_batch,
-                        min_bucket=args.min_bucket, patience=args.patience,
-                        checkpoint_dir=args.checkpoint_dir)
-    for inst in make_workload(args.num_instances, args.min_n, args.max_n,
-                              args.seed):
-        svc.submit(inst)
-    results = svc.run()
-    _report(results, svc.stats)
+        if args.per_instance_hyper:
+            ap.error("--per-instance-hyper requires --stream")
+        svc = SolverService(cfg, max_batch=args.max_batch,
+                            min_bucket=args.min_bucket,
+                            patience=args.patience,
+                            checkpoint_dir=args.checkpoint_dir, mesh=mesh)
+        for inst in make_workload(args.num_instances, args.min_n,
+                                  args.max_n, args.seed):
+            svc.submit(inst)
+        results = svc.run()
+        _report(results, svc.stats)
+    except UnsupportedKernelRoute:
+        # one actionable line instead of a traceback (DESIGN.md §10: the
+        # only kernel-unsupported config is per-instance Hyper operands)
+        print("solve_serve: --use-pallas cannot serve --per-instance-hyper "
+              "(kernel alpha/beta are static, Hyper operands are traced); "
+              "drop one of the two flags", file=sys.stderr)
+        sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -9,15 +9,20 @@
                and supervisor/checkpoint crash recovery;
 - streaming.py continuous batching: per-bucket resident slot pools with
                chunked stepping, harvest + refill surgery mid-run,
-               priority/deadline admission and backpressure.
+               priority/deadline admission, deadline eviction and
+               backpressure;
+- placement.py multi-device fabric: shard_map the engine's instance axis
+               over a 1-D device mesh (phantom-slot padding for uneven
+               batches), place streaming pools per device.
 
 See DESIGN.md §8 for the bucketing policy and masking invariants, §9 for
-the streaming slot lifecycle.
+the streaming slot lifecycle, §11 for the placement layer.
 """
 from .batch import (ProblemBatch, bucket_size, make_batch,  # noqa: F401
                     padded_problem)
 from .engine import (init_state, init_states, run_batch,  # noqa: F401
                      solve_instances)
+from .placement import data_mesh, run_batch_sharded  # noqa: F401
 from .service import SolveResult, SolverService  # noqa: F401
 from .streaming import (AdmissionError, StreamingPool,  # noqa: F401
                         StreamingSolverService, TraceItem,

@@ -131,7 +131,8 @@ _run_batch_donated = jax.jit(_run_batch_impl, static_argnames=_STATIC,
 
 def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
               cfg: aco.ACOConfig, max_iters: int, patience: int = 0,
-              since: Optional[Array] = None, donate: bool = False
+              since: Optional[Array] = None, donate: bool = False,
+              mesh=None, instance_spec: str = "data"
               ) -> tuple[aco.ColonyState, Array]:
     """Advance B colonies by up to ``max_iters`` more iterations each.
 
@@ -147,9 +148,20 @@ def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
     chunk stepping, solver/streaming.py).  The caller must drop its
     references to them afterwards: on TPU the memory is reused for the
     outputs (DESIGN.md §10 buffer-donation contract).
+    mesh: a ``jax.sharding.Mesh`` routes the call through the placement
+    layer (DESIGN.md §11): the instance axis is padded to a multiple of
+    the mesh's ``instance_spec`` axis size with already-done phantom slots
+    and sharded over the devices via shard_map — bitwise identical per
+    instance to the single-device call, any device count, uneven B % D
+    included.
     """
     if since is None:
         since = jnp.zeros_like(budgets)
+    if mesh is not None:
+        from . import placement
+        return placement.run_batch_sharded(problem, states, budgets, cfg,
+                                           max_iters, patience, since, mesh,
+                                           instance_spec, donate)
     if donate:
         _quiet_cpu_donation_warning()
     fn = _run_batch_donated if donate else _run_batch_jit
@@ -161,12 +173,14 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
                     seeds: Optional[Sequence[int]] = None,
                     n_pad: Optional[int] = None, patience: int = 0,
                     nn_k: Optional[int] = None,
-                    hypers: Optional[Sequence[aco.Hyper]] = None
+                    hypers: Optional[Sequence[aco.Hyper]] = None,
+                    mesh=None
                     ) -> tuple[aco.ColonyState, batch_mod.ProblemBatch]:
     """Convenience one-shot: batch, init, run. All instances in one bucket.
 
     ``hypers``: per-instance alpha/beta/rho/q profiles (aco.Hyper); one
     bucket then mixes tuning profiles in a single compiled program.
+    ``mesh``: shard the instance axis over the mesh (placement layer).
     """
     instances = tuple(instances)
     its = list(iterations) if iterations is not None else \
@@ -180,7 +194,7 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
     budgets = jnp.asarray(its, jnp.int32)
     # freshly-built states are never reused: safe to donate their buffers
     states, _ = run_batch(b.problem, states, budgets, cfg, int(max(its)),
-                          patience, donate=True)
+                          patience, donate=True, mesh=mesh)
     return states, b
 
 

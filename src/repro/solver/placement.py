@@ -1,0 +1,134 @@
+"""Placement layer: shard the engine's instance axis over a device mesh.
+
+``engine.run_batch`` advances B colonies with one vmapped ``while_loop`` on
+one device.  This module is the multi-device route (DESIGN.md §11): the
+same loop body is wrapped in ``shard_map`` over a 1-D ``data`` mesh axis,
+so one jitted call steps B instances spread across D devices.  There is
+**no cross-device traffic inside the loop** — every instance's trajectory
+is device-local (the per-instance freeze mask already makes trajectories
+independent of batch composition), each shard's ``while_loop`` exits when
+its *local* instances are done, and the only collective cost is the final
+gather when the caller reads the sharded outputs.
+
+Uneven batches: when B is not a multiple of the mesh's device count the
+instance axis is padded with **phantom slots** — row 0 of the problem and
+state replicated, with budget 0 — which the engine's done mask freezes
+before the first step, exactly the mechanism ``batch.py`` uses for phantom
+cities and the streaming pool uses for empty slots.  Padding happens
+outside the jitted program and the outputs are sliced back to B rows, so
+callers never observe it.
+
+Exactness contract (tests/test_sharded.py): sharded ``run_batch`` is
+*bitwise* identical per instance to the single-device call for any device
+count, including B % D != 0 and donated buffers — each shard runs the same
+per-slice numerics as the single-device vmapped program, and the phantom
+slots never step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import aco
+
+from . import engine
+
+Array = jax.Array
+
+
+def data_mesh(devices: Optional[int] = None, axis: str = "data") -> Mesh:
+    """1-D mesh over the host's first ``devices`` accelerators.
+
+    Built by a function, never at import time (the dry-run isolation rule:
+    importing this module must not touch jax device state).
+    """
+    n = devices if devices is not None else len(jax.devices())
+    avail = len(jax.devices())
+    if not 1 <= n <= avail:
+        raise ValueError(f"requested {n} devices, have {avail}")
+    return Mesh(jax.devices()[:n], (axis,))
+
+
+def pad_to_devices(problem: aco.Problem, states: aco.ColonyState,
+                   budgets: Array, since: Array, multiple: int):
+    """Pad the instance axis to a multiple of ``multiple`` with phantom
+    slots: row 0's problem/state replicated with budget 0, which the
+    engine's done mask freezes before the first step (their lanes are
+    computed then discarded by the where-merge, so they only need finite
+    numerics — a real instance's row is finite).  Returns the padded
+    pytrees and the original B."""
+    b = budgets.shape[0]
+    pad = (-b) % multiple
+    if pad == 0:
+        return problem, states, budgets, since, b
+
+    def rep(x):
+        return jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
+
+    problem = jax.tree.map(rep, problem)
+    states = jax.tree.map(rep, states)
+    budgets = jnp.concatenate([budgets, jnp.zeros((pad,), budgets.dtype)])
+    since = jnp.concatenate([since, jnp.zeros((pad,), since.dtype)])
+    return problem, states, budgets, since, b
+
+
+# One compiled program per (mesh, axis, cfg, max_iters, patience, donate):
+# the same cache granularity as engine's jit, plus the topology.
+_CACHE: dict = {}
+
+
+def _sharded_fn(mesh: Mesh, axis: str, cfg: aco.ACOConfig, max_iters: int,
+                patience: int, donate: bool):
+    key = (mesh, axis, cfg, max_iters, patience, donate)
+    fn = _CACHE.get(key)
+    if fn is None:
+        spec = P(axis)
+
+        def local(problem, states, budgets, since):
+            # Per-shard body == the single-device program on the local
+            # slice; its while_loop conds on *local* done masks only, so
+            # shards finish independently (no collectives => divergent
+            # trip counts across devices are fine).
+            return engine._run_batch_impl(problem, states, budgets, cfg,
+                                          max_iters, patience, since)
+
+        # check_rep=False: jax 0.4.37 has no replication rule for while_loop
+        # inside shard_map; safe here — the body has no collectives and
+        # every output is sharded, nothing is claimed replicated.
+        sharded = shard_map(local, mesh=mesh,
+                            in_specs=(spec, spec, spec, spec),
+                            out_specs=(spec, spec), check_rep=False)
+        fn = jax.jit(sharded, donate_argnums=(1, 3) if donate else ())
+        _CACHE[key] = fn
+    return fn
+
+
+def run_batch_sharded(problem: aco.Problem, states: aco.ColonyState,
+                      budgets: Array, cfg: aco.ACOConfig, max_iters: int,
+                      patience: int, since: Array, mesh: Mesh,
+                      instance_spec: str = "data", donate: bool = False
+                      ) -> tuple[aco.ColonyState, Array]:
+    """Mesh route of ``engine.run_batch``: pad B to a device multiple,
+    shard the instance axis over ``mesh[instance_spec]``, run, slice back.
+
+    Donation covers the (possibly padded) stacked state and stagnation
+    counters, same contract as the single-device donated route."""
+    if instance_spec not in mesh.shape:
+        raise ValueError(f"mesh has no axis {instance_spec!r}; "
+                         f"axes: {tuple(mesh.shape)}")
+    d = mesh.shape[instance_spec]
+    problem, states, budgets, since, b = pad_to_devices(
+        problem, states, budgets, since, d)
+    if donate:
+        engine._quiet_cpu_donation_warning()
+    fn = _sharded_fn(mesh, instance_spec, cfg, max_iters, patience, donate)
+    states, since = fn(problem, states, budgets, since)
+    if states.best_len.shape[0] != b:        # slice phantom slots back off
+        states = jax.tree.map(lambda x: x[:b], states)
+        since = since[:b]
+    return states, since

@@ -54,6 +54,10 @@ class SolveResult:
     gap_pct: Optional[float]       # vs known optimum, when available
     latency_s: float               # submit -> result
     solve_s: float                 # batch wall time (shared by batch peers)
+    # Deadline eviction (streaming hardening, DESIGN.md §9): True when the
+    # request's deadline expired before completion — the result then holds
+    # the best tour found so far (or an empty tour if it never ran).
+    expired: bool = False
 
 
 class SolverService:
@@ -63,7 +67,7 @@ class SolverService:
                  max_batch: int = 8, min_bucket: int = 16,
                  patience: int = 0,
                  checkpoint_dir: Optional[str] = None,
-                 ckpt_chunk: int = 25):
+                 ckpt_chunk: int = 25, mesh=None):
         if cfg is None:
             cfg = aco.ACOConfig()
         if cfg.deposit not in pheromone.STRATEGIES:
@@ -75,6 +79,10 @@ class SolverService:
         self.patience = patience
         self.checkpoint_dir = checkpoint_dir
         self.ckpt_chunk = ckpt_chunk
+        # Topology (DESIGN.md §11): with a mesh, every batch job's instance
+        # axis is sharded over the mesh devices by the placement layer —
+        # results stay bitwise what the single-device scheduler returns.
+        self.mesh = mesh
         self._queue: list[SolveRequest] = []
         self._next_id = 0
         self._jobs_run = 0
@@ -122,6 +130,8 @@ class SolverService:
         lat = [r.latency_s for r in results]
         self.stats = {
             "requests": len(queue),
+            "devices": (int(np.prod(list(self.mesh.shape.values())))
+                        if self.mesh is not None else 1),
             "batches": batch_count,
             "buckets": {str(b): len(rs) for b, rs in sorted(by_bucket.items())},
             "wall_s": wall,
@@ -162,11 +172,12 @@ class SolverService:
                 lambda: (init(), jnp.zeros_like(budgets)),
                 lambda st, i: engine.run_batch(
                     b.problem, st[0], budgets, self.cfg, chunk,
-                    self.patience, st[1]))
+                    self.patience, st[1], mesh=self.mesh))
             states, _ = sup.run()
         else:
             states, _ = engine.run_batch(b.problem, init(), budgets,
-                                         self.cfg, max_it, self.patience)
+                                         self.cfg, max_it, self.patience,
+                                         mesh=self.mesh)
         states.best_len.block_until_ready()
         solve_s = time.perf_counter() - t0
 

@@ -61,9 +61,14 @@ class StreamRequest:
     iterations: int
     seed: int
     priority: int = 0                  # higher admitted first
-    deadline: Optional[float] = None   # perf_counter seconds; earlier first
+    # Latency budget in seconds after submission; tighter budgets admit
+    # first.  Once ``expires_at`` (= submitted_at + deadline, stamped at
+    # submit) passes, the request is *evicted* at the next step — from the
+    # waiting queue or from its running slot — as an ``expired`` result.
+    deadline: Optional[float] = None
     hyper: Optional[aco.Hyper] = None
     submitted_at: float = 0.0
+    expires_at: Optional[float] = None  # absolute perf_counter seconds
     # Prepped at submit time (off the stepping critical path): the padded
     # Problem and fresh ColonyState the refill surgery writes into a slot.
     prob: Optional[aco.Problem] = None
@@ -71,7 +76,8 @@ class StreamRequest:
 
     def order_key(self):
         return (-self.priority,
-                self.deadline if self.deadline is not None else float("inf"),
+                self.expires_at if self.expires_at is not None
+                else float("inf"),
                 self.request_id)
 
     def prep(self, bucket: int, cfg: aco.ACOConfig, nn_k: int) -> None:
@@ -90,13 +96,19 @@ class StreamingPool:
 
     def __init__(self, bucket: int, slots: int, cfg: aco.ACOConfig,
                  patience: int = 0, nn_k: Optional[int] = None,
-                 per_instance_hyper: bool = False):
+                 per_instance_hyper: bool = False, device=None):
         self.bucket = bucket
         self.slots = slots
         self.cfg = cfg
         self.patience = patience
         self.nn_k = cfg.nn_k if nn_k is None else nn_k
         self.per_instance_hyper = per_instance_hyper
+        # Per-device placement (DESIGN.md §11): committing the resident
+        # pytrees to one device pins every chunk step there — the
+        # topology-aware service runs one pool per mesh device and the
+        # host dispatches all pools' (async) chunk steps before reading
+        # any result back, so pools step concurrently.
+        self.device = device
         # Dummy resident for empty slots: any small valid instance works —
         # budget 0 keeps it permanently frozen, so its trajectory is never
         # observed; it only has to be finite so the discarded vmap lanes
@@ -110,6 +122,12 @@ class StreamingPool:
         self.states: aco.ColonyState = jax.tree.map(stack, dstate)
         self.budgets = jnp.zeros((slots,), jnp.int32)
         self.since = jnp.zeros((slots,), jnp.int32)
+        if device is not None:
+            put = lambda t: jax.device_put(t, device)
+            self.problem = put(self.problem)
+            self.states = put(self.states)
+            self.budgets = put(self.budgets)
+            self.since = put(self.since)
         self.requests: list[Optional[StreamRequest]] = [None] * slots
         self.filled_at: list[float] = [0.0] * slots
         self.fills = 0
@@ -176,11 +194,28 @@ class StreamingPool:
         done = it >= np.asarray(self.budgets)
         if self.patience > 0:
             done = done | (np.asarray(self.since) >= self.patience)
+        return self._free_slots(
+            [i for i, r in enumerate(self.requests)
+             if r is not None and done[i]])
+
+    def evict_expired(self, now: float) -> list[SolveResult]:
+        """Evict occupied slots whose request deadline has passed: the
+        freed slot returns a SolveResult flagged ``expired`` holding the
+        best tour found so far (deadline-bounded anytime behaviour), and
+        budget 0 refreezes the slot so the ordinary refill surgery can
+        reuse it.  Sibling slots are untouched bitwise — freeing is the
+        same ``.at[idx].set`` path harvest uses."""
         hits = [i for i, r in enumerate(self.requests)
-                if r is not None and done[i]]
+                if r is not None and r.expires_at is not None
+                and r.expires_at <= now]
+        return self._free_slots(hits, expired=True)
+
+    def _free_slots(self, hits: list[int],
+                    expired: bool = False) -> list[SolveResult]:
         if not hits:
             return []
         now = time.perf_counter()
+        it = np.asarray(self.states.iteration)
         lens = np.asarray(self.states.best_len)
         tours = np.asarray(self.states.best_tour)
         out = []
@@ -197,7 +232,7 @@ class StreamingPool:
                 iterations=int(it[i]),
                 gap_pct=(100.0 * (best_len / opt - 1.0) if opt else None),
                 latency_s=now - req.submitted_at,
-                solve_s=now - self.filled_at[i]))
+                solve_s=now - self.filled_at[i], expired=expired))
             self.requests[i] = None
             freed.append(i)
         self.budgets = self.budgets.at[jnp.asarray(freed)].set(0)
@@ -215,12 +250,20 @@ class StreamingSolverService:
     carry alpha/beta/rho/q operands so one bucket mixes tuning profiles
     (requests may pass a Hyper or override dict; others run the config
     profile).
+
+    ``mesh`` places one resident pool per mesh device for every bucket
+    (DESIGN.md §11): admissions route to the least-occupied pool, all
+    pools' chunk steps are dispatched before any harvest, and every
+    result stays bitwise what the single-pool service returns for the
+    same request.  Requests whose ``deadline`` passes are evicted from
+    the waiting queue and from running slots at the next step(), returned
+    as ``expired``-flagged results and counted in stats().
     """
 
     def __init__(self, cfg: Optional[aco.ACOConfig] = None,
                  max_batch: int = 8, min_bucket: int = 16, chunk: int = 5,
                  patience: int = 0, max_waiting: Optional[int] = None,
-                 per_instance_hyper: bool = False):
+                 per_instance_hyper: bool = False, mesh=None):
         if cfg is None:
             cfg = aco.ACOConfig()
         if cfg.use_pallas and per_instance_hyper:
@@ -249,12 +292,24 @@ class StreamingSolverService:
         # device memory — requests beyond the window are prepped when they
         # reach the head (at admit time) or, worst case, at fill.
         self.prep_ahead = 4 * max_batch
-        self._pools: dict[int, StreamingPool] = {}
+        # Topology (DESIGN.md §11): with a mesh, each bucket owns one
+        # resident pool *per mesh device* (committed buffers pin its chunk
+        # steps to that device); admissions go to the least-occupied pool
+        # and every step dispatches all pools before harvesting any, so
+        # the D async chunk programs overlap across devices.  Without a
+        # mesh there is exactly one device slot (None = default device)
+        # and behaviour is unchanged.
+        self.mesh = mesh
+        self._devices = (list(mesh.devices.flat) if mesh is not None
+                         else [None])
+        self._pools: dict[int, list[StreamingPool]] = {}
         self._waiting: list[StreamRequest] = []
         self._next_id = 0
         self._submitted = 0
         self._rejected = 0
         self._completed = 0
+        self._expired_running = 0
+        self._expired_waiting = 0
         self._latencies: list[float] = []
         self._occ_samples: list[float] = []
         self._per_bucket_done: dict[int, int] = {}
@@ -269,7 +324,12 @@ class StreamingSolverService:
                hyper: Union[aco.Hyper, dict, None] = None) -> int:
         """Queue a request; returns its id.  Raises AdmissionError when the
         waiting queue is full (backpressure) — resident slots don't count,
-        only un-admitted requests."""
+        only un-admitted requests.  ``deadline`` is a latency budget in
+        seconds from now: it orders admission (tighter first) and, once
+        exceeded, the request is evicted at the next step() as an
+        ``expired`` result."""
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline {deadline} <= 0")
         if self.max_waiting is not None and \
                 len(self._waiting) >= self.max_waiting:
             self._rejected += 1
@@ -296,7 +356,8 @@ class StreamingSolverService:
             request_id=rid, instance=instance, iterations=its,
             seed=seed if seed is not None else self.cfg.seed + rid,
             priority=priority, deadline=deadline, hyper=hyper,
-            submitted_at=now)
+            submitted_at=now,
+            expires_at=None if deadline is None else now + deadline)
         # Prep the padded problem + initial state at enqueue time (so
         # refill surgery on the stepping critical path is only .at[ix].set)
         # — but only within the bounded look-ahead window.
@@ -313,41 +374,53 @@ class StreamingSolverService:
 
     @property
     def resident(self) -> int:
-        return sum(p.occupied for p in self._pools.values())
+        return sum(p.occupied for p in self._all_pools())
 
     @property
     def busy(self) -> bool:
         return bool(self._waiting) or self.resident > 0
 
     # ---------------------------------------------------------- admission
-    def _pool(self, bucket: int) -> StreamingPool:
+    def _bucket_pools(self, bucket: int) -> list[StreamingPool]:
         if bucket not in self._pools:
-            self._pools[bucket] = StreamingPool(
-                bucket, self.max_batch, self.cfg, self.patience,
-                per_instance_hyper=self.per_instance_hyper)
+            self._pools[bucket] = [
+                StreamingPool(bucket, self.max_batch, self.cfg,
+                              self.patience,
+                              per_instance_hyper=self.per_instance_hyper,
+                              device=dev)
+                for dev in self._devices]
         return self._pools[bucket]
+
+    def _all_pools(self):
+        for pools in self._pools.values():
+            yield from pools
 
     def _admit(self) -> int:
         """Move waiting requests (priority desc, deadline asc, arrival)
-        into free slots of their bucket's pool.  Returns #admitted."""
+        into free slots of their bucket's pools, each to the currently
+        least-occupied pool (deterministic: ties break to the lowest
+        device index).  Returns #admitted."""
         if not self._waiting:
             return 0
         self._waiting.sort(key=StreamRequest.order_key)
-        fills: dict[int, list[tuple[int, StreamRequest]]] = {}
-        free: dict[int, list[int]] = {}
+        fills: dict[tuple[int, int], list[tuple[int, StreamRequest]]] = {}
+        free: dict[int, list[list[int]]] = {}   # bucket -> per-pool slots
         leftover: list[StreamRequest] = []
         for req in self._waiting:
             b = batch_mod.bucket_size(req.instance.n, self.min_bucket)
             if b not in free:
-                free[b] = self._pool(b).free_slots()
-            if free[b]:
-                fills.setdefault(b, []).append((free[b].pop(0), req))
+                free[b] = [p.free_slots() for p in self._bucket_pools(b)]
+            # least-occupied == most free slots (all pools are same size);
+            # the running pop keeps in-flight assignments counted.
+            j = max(range(len(free[b])), key=lambda k: len(free[b][k]))
+            if free[b][j]:
+                fills.setdefault((b, j), []).append((free[b][j].pop(0), req))
             else:
                 leftover.append(req)
         self._waiting = leftover
         n = 0
-        for b, assignments in fills.items():
-            self._pools[b].fill_slots(assignments)
+        for (b, j), assignments in fills.items():
+            self._pools[b][j].fill_slots(assignments)
             n += len(assignments)
         # Prefetch prep for the queue head (next harvest's refills) —
         # between chunks, not inside the surgery itself.
@@ -358,25 +431,66 @@ class StreamingSolverService:
                          self.cfg, self.cfg.nn_k)
         return n
 
+    # ----------------------------------------------------------- eviction
+    def _evict_expired(self) -> list[SolveResult]:
+        """Deadline hardening (ROADMAP): drop deadline-expired requests
+        from the waiting queue (never ran: empty tour, inf length) and
+        from running slots (partial best so far); every eviction returns a
+        SolveResult flagged ``expired`` and is counted in stats()."""
+        now = time.perf_counter()
+        out: list[SolveResult] = []
+        if any(r.expires_at is not None and r.expires_at <= now
+               for r in self._waiting):
+            keep: list[StreamRequest] = []
+            for req in self._waiting:
+                if req.expires_at is not None and req.expires_at <= now:
+                    out.append(SolveResult(
+                        request_id=req.request_id, name=req.instance.name,
+                        n=req.instance.n,
+                        bucket=batch_mod.bucket_size(req.instance.n,
+                                                     self.min_bucket),
+                        best_len=float("inf"),
+                        best_tour=np.zeros((0,), np.int32), iterations=0,
+                        gap_pct=None, latency_s=now - req.submitted_at,
+                        solve_s=0.0, expired=True))
+                    self._expired_waiting += 1
+                else:
+                    keep.append(req)
+            self._waiting = keep
+        for pool in self._all_pools():
+            if pool.occupied:
+                got = pool.evict_expired(now)
+                self._expired_running += len(got)
+                out.extend(got)
+        return out
+
     # ------------------------------------------------------------ stepping
     def step(self) -> list[SolveResult]:
-        """One scheduler tick: admit, advance every non-empty pool by one
-        chunk, harvest.  Returns newly finished results (completion
-        order)."""
+        """One scheduler tick: evict expired deadlines, admit, advance
+        every non-empty pool by one chunk, harvest.  Returns newly
+        finished results (completion order, expired ones included).
+
+        All pools' chunk steps are dispatched before any harvest reads a
+        result back: jax dispatch is async, so with per-device pools the
+        D chunk programs execute concurrently across the mesh while the
+        host is still enqueueing/harvesting."""
+        results: list[SolveResult] = list(self._evict_expired())
         self._admit()
-        results: list[SolveResult] = []
-        for pool in self._pools.values():
+        stepped: list[StreamingPool] = []
+        for pool in self._all_pools():
             if pool.occupied == 0:
                 continue
-            occ_during = pool.occupied          # slots active in this chunk
-            pool.step_chunk(self.chunk)
-            got = pool.harvest()
-            self._occ_samples.append(occ_during / pool.slots)
-            results.extend(got)
+            self._occ_samples.append(pool.occupied / pool.slots)
+            pool.step_chunk(self.chunk)         # async dispatch
+            stepped.append(pool)
+        for pool in stepped:
+            results.extend(pool.harvest())      # first device read-back
         if results:
-            self._t_last_harvest = time.perf_counter()
-            self._completed += len(results)
-            for r in results:
+            done = [r for r in results if not r.expired]
+            if done:
+                self._t_last_harvest = time.perf_counter()
+                self._completed += len(done)
+            for r in done:
                 self._latencies.append(r.latency_s)
                 self._per_bucket_done[r.bucket] = \
                     self._per_bucket_done.get(r.bucket, 0) + 1
@@ -406,11 +520,17 @@ class StreamingSolverService:
             "submitted": self._submitted,
             "rejected": self._rejected,
             "completed": self._completed,
+            "expired": self._expired_waiting + self._expired_running,
+            "expired_waiting": self._expired_waiting,
+            "expired_running": self._expired_running,
             "waiting": self.waiting,
             "resident": self.resident,
-            "chunks": sum(p.chunks for p in self._pools.values()),
-            "fills": sum(p.fills for p in self._pools.values()),
-            "slots": {str(b): p.slots for b, p in sorted(self._pools.items())},
+            "devices": len(self._devices),
+            "pools": sum(len(ps) for ps in self._pools.values()),
+            "chunks": sum(p.chunks for p in self._all_pools()),
+            "fills": sum(p.fills for p in self._all_pools()),
+            "slots": {str(b): sum(p.slots for p in ps)
+                      for b, ps in sorted(self._pools.items())},
             "buckets": {str(b): c
                         for b, c in sorted(self._per_bucket_done.items())},
             "occupancy_mean": (float(np.mean(self._occ_samples))

@@ -1,0 +1,217 @@
+"""Placement-layer tests (DESIGN.md §11): sharded == single-device bitwise.
+
+Multi-device cases run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test
+session keeps seeing exactly 1 device (the dry-run isolation rule, same
+pattern as tests/test_distributed.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aco, tsp
+from repro.solver import batch as batch_mod
+from repro.solver import engine, placement
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(body: str, xla_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={xla_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ------------------------------------------------------------- in-process
+def test_pad_to_devices_phantom_slots():
+    """Uneven batches gain replicated row-0 phantom slots with budget 0,
+    and even batches pass through untouched."""
+    insts = [tsp.circle_instance(n, seed=n) for n in (10, 12, 14)]
+    cfg = aco.ACOConfig()
+    b = batch_mod.make_batch(insts, 16, cfg.nn_k)
+    states = engine.init_states(insts, cfg, [1, 2, 3], 16)
+    budgets = jnp.asarray([5, 6, 7], jnp.int32)
+    since = jnp.zeros_like(budgets)
+
+    p, s, bud, sin, orig = placement.pad_to_devices(
+        b.problem, states, budgets, since, 4)
+    assert orig == 3
+    assert bud.shape == (4,) and sin.shape == (4,)
+    assert int(bud[3]) == 0                     # phantom: already done
+    np.testing.assert_array_equal(np.asarray(p.dist[3]),
+                                  np.asarray(p.dist[0]))
+    np.testing.assert_array_equal(np.asarray(s.tau[3]),
+                                  np.asarray(s.tau[0]))
+
+    p2, s2, bud2, _, orig2 = placement.pad_to_devices(
+        b.problem, states, budgets, since, 3)
+    assert orig2 == 3 and bud2.shape == (3,)
+    assert p2 is b.problem and s2 is states    # no-op when B % D == 0
+
+
+def test_data_mesh_bounds():
+    with pytest.raises(ValueError, match="devices"):
+        placement.data_mesh(99)
+    with pytest.raises(ValueError, match="devices"):
+        placement.data_mesh(0)
+    assert placement.data_mesh(1).shape["data"] == 1
+
+
+def test_sharded_one_device_mesh_bitwise():
+    """The mesh route with D=1 (the only topology the main session can
+    build) is bitwise the plain route, uneven-B padding included."""
+    insts = [tsp.circle_instance(n, seed=n) for n in (10, 13, 12)]
+    cfg = aco.ACOConfig(iterations=6, selection="gumbel")
+    b = batch_mod.make_batch(insts, 16, cfg.nn_k)
+    budgets = jnp.asarray([6, 3, 5], jnp.int32)
+    ref, ref_since = engine.run_batch(
+        b.problem, engine.init_states(insts, cfg, [1, 2, 3], 16),
+        budgets, cfg, 6, patience=2)
+    got, got_since = engine.run_batch(
+        b.problem, engine.init_states(insts, cfg, [1, 2, 3], 16),
+        budgets, cfg, 6, patience=2, mesh=placement.data_mesh(1))
+    for a, c in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    np.testing.assert_array_equal(np.asarray(ref_since),
+                                  np.asarray(got_since))
+
+
+def test_run_batch_rejects_unknown_mesh_axis():
+    insts = [tsp.circle_instance(10, seed=0)]
+    cfg = aco.ACOConfig(iterations=2)
+    b = batch_mod.make_batch(insts, 16, cfg.nn_k)
+    with pytest.raises(ValueError, match="no axis"):
+        engine.run_batch(b.problem,
+                         engine.init_states(insts, cfg, [1], 16),
+                         jnp.asarray([2], jnp.int32), cfg, 2,
+                         mesh=placement.data_mesh(1),
+                         instance_spec="model")
+
+
+# ---------------------------------------------------- subprocess, 8 devices
+def test_sharded_run_batch_bitwise_parity_8dev():
+    """Sharded run_batch == single-device run_batch bitwise per instance:
+    AS/MMAS/ACS, uneven B % D, per-instance budgets, D in {1, 2, 8},
+    donated buffers."""
+    _run_subprocess("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.core import aco, tsp
+        from repro.solver import batch as bm, engine, placement
+        assert len(jax.devices()) == 8, jax.devices()
+
+        insts = [tsp.circle_instance(n, seed=n) if k % 2 == 0
+                 else tsp.random_instance(n, seed=n)
+                 for k, n in enumerate((10, 13, 12, 15, 11))]
+        budgets = jnp.asarray([6, 3, 5, 2, 7], jnp.int32)  # per-instance
+        for variant in ("as", "mmas", "acs"):
+            cfg = aco.ACOConfig(iterations=7, variant=variant,
+                                selection="gumbel")
+            b = bm.make_batch(insts, 16, cfg.nn_k)
+            seeds = [40 + i for i in range(5)]
+            ref, ref_since = engine.run_batch(
+                b.problem, engine.init_states(insts, cfg, seeds, 16),
+                budgets, cfg, 7, patience=3)
+            for d in (1, 2, 8):              # 5 % 2 and 5 % 8 both uneven
+                for donate in (False, True):
+                    got, got_since = engine.run_batch(
+                        b.problem,
+                        engine.init_states(insts, cfg, seeds, 16),
+                        budgets, cfg, 7, patience=3,
+                        mesh=placement.data_mesh(d), donate=donate)
+                    for a, c in zip(ref, got):
+                        np.testing.assert_array_equal(
+                            np.asarray(a), np.asarray(c),
+                            err_msg=f"{variant} D={d} donate={donate}")
+                    np.testing.assert_array_equal(
+                        np.asarray(ref_since), np.asarray(got_since))
+        print("PARITY OK")
+    """)
+
+
+def test_service_sharded_matches_unsharded_8dev():
+    """SolverService with a mesh returns bitwise the unsharded service's
+    results (multi-bucket workload, uneven counts per bucket)."""
+    _run_subprocess("""
+        import numpy as np
+        from repro.core import aco, tsp
+        from repro.solver import SolverService, placement
+        insts = [tsp.circle_instance(n, seed=n)
+                 for n in (10, 14, 12, 20, 26, 11, 24)]
+        cfg = aco.ACOConfig(iterations=5, selection="gumbel")
+        def run(mesh):
+            svc = SolverService(cfg, max_batch=4, mesh=mesh)
+            for k, inst in enumerate(insts):
+                svc.submit(inst, iterations=3 + (k % 3), seed=60 + k)
+            return svc.run(), svc.stats
+        ref, _ = run(None)
+        got, stats = run(placement.data_mesh(8))
+        assert stats["devices"] == 8, stats
+        for a, c in zip(ref, got):
+            assert a.request_id == c.request_id
+            assert a.best_len == c.best_len, a.request_id
+            np.testing.assert_array_equal(a.best_tour, c.best_tour)
+            assert a.iterations == c.iterations
+        print("SERVICE OK")
+    """)
+
+
+def test_streaming_per_device_pools_match_single_pool_8dev():
+    """StreamingSolverService with per-device pools returns bitwise the
+    single-pool results on the same admission order, and actually spreads
+    the work over multiple pools."""
+    _run_subprocess("""
+        import numpy as np
+        from repro.core import aco, tsp
+        from repro.solver import StreamingSolverService, placement
+        insts = [tsp.circle_instance(n, seed=n) if k % 2 == 0
+                 else tsp.random_instance(n, seed=n)
+                 for k, n in enumerate((10, 13, 12, 14, 11, 15, 16, 13))]
+        buds = (6, 3, 7, 4, 5, 6, 2, 4)
+        cfg = aco.ACOConfig(iterations=8, selection="gumbel")
+        def run(mesh):
+            svc = StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                         chunk=2, mesh=mesh)
+            for k, inst in enumerate(insts):
+                svc.submit(inst, iterations=buds[k], seed=80 + k)
+            return ({r.request_id: r for r in svc.run_until_drained()},
+                    svc.stats)
+        ref, _ = run(None)
+        got, stats = run(placement.data_mesh(4))
+        assert stats["devices"] == 4 and stats["pools"] == 4, stats
+        # least-occupied routing really spread the first wave over pools
+        assert stats["fills"] == len(insts)
+        for k in ref:
+            assert ref[k].best_len == got[k].best_len, k
+            np.testing.assert_array_equal(ref[k].best_tour,
+                                          got[k].best_tour)
+            assert ref[k].iterations == got[k].iterations
+        print("STREAM OK")
+    """)
+
+
+# ------------------------------------------------------- solve_serve CLI
+def test_solve_serve_unsupported_kernel_route_one_liner():
+    """--use-pallas + --per-instance-hyper exits 2 with one actionable
+    line on stderr, not a traceback."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.solve_serve", "--stream",
+         "--use-pallas", "--per-instance-hyper", "--num-instances", "2",
+         "--iterations", "2"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 2
+    err = out.stderr.strip().splitlines()
+    assert len(err) == 1, out.stderr
+    assert "per-instance-hyper" in err[0] and "Traceback" not in out.stderr

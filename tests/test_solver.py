@@ -262,9 +262,9 @@ def test_service_checkpoint_crash_recovery(tmp_path, monkeypatch):
     crashes = {"left": 1}
 
     def flaky(problem, states, budgets, cfg_, max_iters, patience=0,
-              since=None):
+              since=None, **kw):
         out = real_run_batch(problem, states, budgets, cfg_, max_iters,
-                             patience, since)
+                             patience, since, **kw)
         if int(np.asarray(out[0].iteration).max()) >= 4 and crashes["left"]:
             crashes["left"] -= 1
             raise RuntimeError("injected crash after chunk")

@@ -135,6 +135,87 @@ def test_streaming_rejects_pallas_hyper_and_unknown_deposit():
         streaming.StreamingSolverService(aco.ACOConfig(deposit="nope"))
 
 
+# ------------------------------------------- deadline eviction (hardening)
+def test_evict_expired_from_waiting_queue():
+    """A waiting request whose latency budget lapses before admission is
+    evicted (never runs): expired result with empty tour, counted in
+    stats, and it does not block the drain loop."""
+    import time
+    cfg = aco.ACOConfig(iterations=2, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=1, min_bucket=16,
+                                           chunk=2)
+    live = svc.submit(INSTS[0], iterations=2, seed=1)
+    doomed = svc.submit(INSTS[1], iterations=2, seed=2, deadline=1e-9)
+    time.sleep(0.01)           # the budget has certainly lapsed
+    results = {r.request_id: r for r in svc.run_until_drained()}
+    assert results[doomed].expired
+    assert results[doomed].iterations == 0
+    assert results[doomed].best_len == float("inf")
+    assert results[doomed].best_tour.size == 0
+    assert not results[live].expired
+    s = svc.stats
+    assert s["expired"] == 1 and s["expired_waiting"] == 1
+    assert s["completed"] == 1          # expired results don't count
+
+
+def test_evict_expired_running_slot_returns_partial_best():
+    """Pool-level determinism: an occupied slot whose request expired is
+    freed with the best tour found so far, siblings untouched bitwise."""
+    import time
+    cfg = aco.ACOConfig(iterations=10, selection="gumbel")
+    pool = streaming.StreamingPool(16, 2, cfg)
+    now = time.perf_counter()
+    doomed = streaming.StreamRequest(
+        request_id=0, instance=INSTS[0], iterations=10, seed=7,
+        submitted_at=now, deadline=0.001, expires_at=now + 0.001)
+    sibling = streaming.StreamRequest(
+        request_id=1, instance=INSTS[1], iterations=4, seed=8,
+        submitted_at=now)
+    pool.fill_slots([(0, doomed), (1, sibling)])
+    pool.step_chunk(2)                      # both make progress
+    got = pool.evict_expired(now + 10.0)    # doomed is past its expiry
+    assert [r.request_id for r in got] == [0]
+    assert got[0].expired and got[0].iterations == 2
+    assert np.isfinite(got[0].best_len)     # partial best, not inf
+    assert tsp.is_valid_tour(got[0].best_tour)
+    assert pool.free_slots() == [0]
+    # the sibling keeps running to completion, bitwise its solo result
+    pool.step_chunk(2)
+    done = pool.harvest()
+    assert [r.request_id for r in done] == [1]
+    best_len, best_tour = _solo(INSTS[1], cfg, 4, 8)
+    assert done[0].best_len == best_len
+    np.testing.assert_array_equal(done[0].best_tour, best_tour)
+
+
+def test_evicted_slot_is_refilled_exactly():
+    """A running slot evicted mid-run frees through the same budget-0 path
+    as harvest, so the ordinary refill surgery reuses it and the newcomer
+    still reproduces its solo run bitwise."""
+    import time
+    cfg = aco.ACOConfig(iterations=30, selection="gumbel")
+    svc = streaming.StreamingSolverService(cfg, max_batch=1, min_bucket=16,
+                                           chunk=1)
+    hog = svc.submit(INSTS[0], iterations=30, seed=1)   # hogs the one slot
+    succ = svc.submit(INSTS[1], iterations=3, seed=2)
+    assert svc.step() == []                 # hog admitted and stepping
+    pool = svc._pools[16][0]
+    assert pool.requests[0].request_id == hog
+    # force the hog's latency budget to lapse mid-run (deterministic —
+    # no wall-clock race) and let the scheduler evict + refill
+    pool.requests[0].expires_at = time.perf_counter() - 1.0
+    results = {r.request_id: r for r in svc.run_until_drained()}
+    assert results[hog].expired
+    assert results[hog].iterations >= 1     # it really ran before eviction
+    assert not results[succ].expired
+    best_len, best_tour = _solo(INSTS[1], cfg, 3, 2)
+    assert results[succ].best_len == best_len
+    np.testing.assert_array_equal(results[succ].best_tour, best_tour)
+    s = svc.stats
+    assert s["expired"] == 1 and s["expired_running"] == 1
+    assert s["fills"] == 2                  # the freed slot was refilled
+
+
 def test_streaming_stats_shape():
     cfg = aco.ACOConfig(iterations=3, selection="gumbel")
     svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,

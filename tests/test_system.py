@@ -32,9 +32,9 @@ def test_c1_data_parallel_faster_than_task_parallel():
 
     t_task = time_fn(lambda k: strategies.construct_tours(
         k, prob.dist, ci, n, method="task_baseline", tau=tau, eta=prob.eta),
-        key, warmup=1, iters=2)
+        key, warmup=1, iters=3)
     t_data = time_fn(lambda k: strategies.construct_tours(
-        k, prob.dist, ci, n, method="data_parallel"), key, warmup=1, iters=2)
+        k, prob.dist, ci, n, method="data_parallel"), key, warmup=1, iters=3)
     assert t_data < t_task, (t_data, t_task)
 
 
@@ -48,9 +48,9 @@ def test_c2_choice_precompute_faster_than_recompute():
     key = jax.random.PRNGKey(0)
     t_base = time_fn(lambda k: strategies.construct_tours(
         k, prob.dist, ci, n, method="task_baseline", tau=tau, eta=prob.eta,
-        alpha=1.0, beta=2.0), key, warmup=1, iters=2)
+        alpha=1.0, beta=2.0), key, warmup=1, iters=3)
     t_choice = time_fn(lambda k: strategies.construct_tours(
-        k, prob.dist, ci, n, method="task_choice"), key, warmup=1, iters=2)
+        k, prob.dist, ci, n, method="task_choice"), key, warmup=1, iters=3)
     assert t_choice < t_base, (t_choice, t_base)
 
 
@@ -68,9 +68,9 @@ def test_c4_s2g_orders_of_magnitude_worse():
         w = 1.0 / res.lengths
         tau = jnp.ones((n, n))
         t_sc = time_fn(jax.jit(lambda t: pheromone.update(
-            t, res.tours, w, 0.5, "scatter")), tau, warmup=1, iters=2)
+            t, res.tours, w, 0.5, "scatter")), tau, warmup=1, iters=3)
         t_s2g = time_fn(jax.jit(lambda t: pheromone.update(
-            t, res.tours, w, 0.5, "s2g")), tau, warmup=1, iters=2)
+            t, res.tours, w, 0.5, "s2g")), tau, warmup=1, iters=3)
         ratios.append(t_s2g / t_sc)
     # assert at the larger size: at n=64 the scatter baseline is dispatch-
     # overhead dominated and the ratio is unstable under a warm process.
