@@ -13,6 +13,7 @@ a quality/perf trajectory to compare against.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -25,6 +26,12 @@ DEFAULT_OUT = os.path.join(_ROOT, "BENCH_quality.json")
 # (kind, size, iterations); grid size is the side (n = side^2).
 CASES = (("circle", 48, 60), ("circle", 100, 80), ("grid", 8, 60))
 SMOKE_CASES = (("circle", 32, 20),)
+
+# Sparse-vs-dense quality gate (DESIGN.md §12): MMAS over candidate pages
+# with k = 16/32 must stay within ~2% of dense MMAS under an equal
+# iteration budget on n = 256 instances.
+SPARSE_CASES = (("circle", 256, 30), ("grid", 16, 30))
+SPARSE_SMOKE_CASES = (("circle", 64, 10),)
 
 
 def make_instance(kind: str, size: int) -> tsp.TSPInstance:
@@ -74,21 +81,56 @@ def rows(cases=CASES):
     return out
 
 
-def main(cases=CASES, out_path: str | None = None):
-    out_path = out_path or DEFAULT_OUT
-    print("quality (gap-to-known-optimum %, equal iteration budget)")
-    results = rows(cases)
+def sparse_rows(cases=SPARSE_CASES):
+    """Dense-vs-sparse MMAS under equal budgets (the 2% quality gate)."""
+    out = []
+    for kind, size, iters in cases:
+        inst = make_instance(kind, size)
+        opt = inst.known_optimum
+        assert opt is not None, (kind, size)
+        base = aco.ACOConfig(iterations=iters, variant="mmas",
+                             selection="gumbel", m=64)
+        t0 = time.perf_counter()
+        dense_len = float(aco.run(inst, base).best_len)
+        r = {"instance": inst.name, "kind": kind, "n": inst.n,
+             "iters": iters, "optimum": opt,
+             "dense_gap_pct": 100 * (dense_len / opt - 1),
+             "dense_s": round(time.perf_counter() - t0, 2)}
+        for k in (16, 32):
+            cfg = dataclasses.replace(base, sparse=True, sparse_k=k)
+            t0 = time.perf_counter()
+            sp_len = float(aco.run(inst, cfg).best_len)
+            r[f"sparse{k}_gap_pct"] = 100 * (sp_len / opt - 1)
+            r[f"sparse{k}_vs_dense_pct"] = 100 * (sp_len / dense_len - 1)
+            r[f"sparse{k}_s"] = round(time.perf_counter() - t0, 2)
+        out.append(r)
+    return out
+
+
+def _print_rows(results):
     hdr = [k for k in results[0] if not k.endswith("_s")]
     print(",".join(hdr))
     for r in results:
         print(",".join(f"{r[k]:.2f}" if isinstance(r[k], float) else str(r[k])
                        for k in hdr))
+
+
+def main(cases=CASES, out_path: str | None = None,
+         sparse_cases=SPARSE_CASES):
+    out_path = out_path or DEFAULT_OUT
+    print("quality (gap-to-known-optimum %, equal iteration budget)")
+    results = rows(cases)
+    _print_rows(results)
+    print("sparse quality (dense vs candidate-page MMAS, equal budget)")
+    sresults = sparse_rows(sparse_cases)
+    _print_rows(sresults)
     if out_path:
         payload = {
             "benchmark": "quality",
             "schema": 1,
             "unix_time": int(time.time()),
             "rows": results,
+            "sparse_rows": sresults,
         }
         parent = os.path.dirname(os.path.abspath(out_path))
         os.makedirs(parent, exist_ok=True)
@@ -105,4 +147,5 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help=f"output JSON path (default: {DEFAULT_OUT})")
     args = ap.parse_args()
-    main(SMOKE_CASES if args.smoke else CASES, args.out)
+    main(SMOKE_CASES if args.smoke else CASES, args.out,
+         SPARSE_SMOKE_CASES if args.smoke else SPARSE_CASES)

@@ -13,7 +13,7 @@ import time
 
 from . import (construction_profile, fig4_overall, fig5_pheromone,
                local_search, quality, roofline, sharded_throughput,
-               solver_throughput, streaming_throughput,
+               solver_throughput, sparse_scale, streaming_throughput,
                table2_tour_construction, table3_pheromone)
 
 TABLES = {
@@ -40,6 +40,9 @@ TABLES = {
         sharded_throughput.CASE if full
         else sharded_throughput.SMOKE_CASE),
     "roofline": lambda full: roofline.main(),
+    "sparse": lambda full: sparse_scale.main(
+        sparse_scale.CASES if full else sparse_scale.DRY_CASES,
+        out_path=sparse_scale.DEFAULT_OUT if full else None),
 }
 
 

@@ -1,0 +1,124 @@
+"""Paper-scale sparse TSP: the O(n*k) paged route past the O(n^2) wall.
+
+The dense pipeline keeps three resident (n, n) float32 tensors per colony;
+at the paper's pr2392 ceiling that is ~69 MB per colony before a single
+transient. The sparse route (DESIGN.md §12) holds O(n*k) pages instead.
+This benchmark runs MMAS over candidate pages on pr1002/pr2392 (real
+TSPLIB files when present under ``examples/``, synthetic same-size
+instances otherwise — no network fetch) for >= 10 full
+construction+update iterations, both the standard data-parallel
+construction and the Partial-ACO window-mutation route, and emits the
+resident-bytes O(n*k)-vs-O(n^2) table plus iters/sec to
+``BENCH_sparse.json``.
+
+Ant count is fixed (not m = n): at this scale the per-step transients are
+(m, n) and the point of the route is that *nothing* resident or transient
+is (n, n)-shaped.
+
+    PYTHONPATH=src python benchmarks/sparse_scale.py [--dry] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core import aco, tsp
+from repro.sparse import aco as sparse_aco
+from repro.sparse import store
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_sparse.json")
+
+# (tsplib name, n, candidate width k)
+CASES = (("pr1002", 1002, 16), ("pr2392", 2392, 16))
+DRY_CASES = (("dry128", 128, 8),)
+
+ITERS = 10          # acceptance floor: >= 10 construction+update iterations
+ANTS = 64
+WINDOW = 64         # Partial-ACO rebuild window
+
+
+def get_instance(name: str, n: int) -> tuple[tsp.TSPInstance, str]:
+    """Real TSPLIB fixture when present, else synthetic of the same size."""
+    inst = tsp.find_tsplib(name)
+    if inst is not None:
+        return inst, "tsplib"
+    return tsp.random_instance(n, seed=n), "synthetic"
+
+
+def bench_case(name: str, n: int, k: int, construction: str,
+               iters: int = ITERS) -> dict:
+    inst, source = get_instance(name, n)
+    cfg = aco.ACOConfig(variant="mmas", selection="iroulette", sparse=True,
+                        sparse_k=k, m=ANTS, iterations=iters, seed=0,
+                        construction=construction, partial_window=WINDOW)
+    ewt = inst.edge_weight_type
+    t0 = time.perf_counter()
+    problem = store.make_sparse_problem(inst, k)
+    state = sparse_aco.init_sparse_colony(inst, cfg)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    state, _ = sparse_aco.sparse_colony_step(problem, state, cfg, ewt)
+    state.best_len.block_until_ready()
+    compile_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for _ in range(iters - 1):
+        state, _ = sparse_aco.sparse_colony_step(problem, state, cfg, ewt)
+    state.best_len.block_until_ready()
+    steady_s = time.perf_counter() - t0
+
+    res = store.resident_bytes(problem, state)
+    dense = store.dense_resident_bytes(inst.n)
+    return {
+        "instance": inst.name, "source": source, "n": inst.n, "k": k,
+        "m": ANTS, "construction": construction, "iters": iters,
+        "best_len": round(float(state.best_len), 2),
+        "resident_bytes_sparse": res,
+        "resident_bytes_dense": dense,
+        "dense_over_sparse": round(dense / res, 1),
+        "build_s": round(build_s, 2),
+        "compile_s": round(compile_s, 2),
+        "iters_per_s": round((iters - 1) / max(steady_s, 1e-9), 3),
+    }
+
+
+def main(cases=CASES, out_path: str | None = DEFAULT_OUT):
+    print("sparse scale (MMAS over candidate pages, no (n, n) tensor)")
+    rows = []
+    for name, n, k in cases:
+        for construction in ("data_parallel", "partial"):
+            rows.append(bench_case(name, n, k, construction))
+    hdr = list(rows[0])
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r[c]) for c in hdr))
+    if out_path:
+        payload = {
+            "benchmark": "sparse_scale",
+            "schema": 1,
+            "unix_time": int(time.time()),
+            "rows": rows,
+        }
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)),
+                    exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {os.path.abspath(out_path)}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="small synthetic case, no JSON (CI wiring check)")
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON path (default: {DEFAULT_OUT})")
+    args = ap.parse_args()
+    if args.dry:
+        main(DRY_CASES, out_path=args.out)       # no JSON unless asked
+    else:
+        main(CASES, args.out or DEFAULT_OUT)

@@ -48,6 +48,12 @@ class ACOConfig:
     # ACS
     q0: float = 0.9
     xi: float = 0.1
+    # Sparse/paged representation (repro.sparse, DESIGN.md §12): O(n·k)
+    # candidate-edge storage instead of dense (n, n) tensors.
+    sparse: bool = False
+    sparse_k: int = 32             # candidate-list width of the sparse pages
+    sparse_overflow: int = 4       # off-list adoption slots per city
+    partial_window: int = 64       # Partial-ACO rebuild window (construction="partial")
 
     def num_ants(self, n: int) -> int:
         return self.m if self.m is not None else n
@@ -319,8 +325,16 @@ def colony_step(problem: Problem, state: ColonyState,
 
 def run(instance: tsp.TSPInstance, cfg: ACOConfig,
         state: Optional[ColonyState] = None,
-        checkpoint_cb=None, checkpoint_every: int = 0) -> ColonyState:
-    """Python-loop driver (checkpointable); inner step is jitted."""
+        checkpoint_cb=None, checkpoint_every: int = 0):
+    """Python-loop driver (checkpointable); inner step is jitted.
+
+    ``cfg.sparse=True`` routes to the O(n·k) paged representation
+    (repro.sparse.run_sparse; returns a SparseColonyState — same
+    best_tour/best_len/iteration/key fields, paged tau instead of (n, n)).
+    """
+    if cfg.sparse:
+        from repro import sparse as sparse_mod
+        return sparse_mod.run_sparse(instance, cfg, state)
     problem = make_problem(instance, cfg.nn_k)
     if state is None:
         state = init_colony(instance, cfg)

@@ -72,7 +72,7 @@ def _finish(start: Array, steps: Array, dist: Array,
     if n_actual is not None:
         return TourResult(tours, tsp.tour_length(dist, tours, n_actual))
     nxt = jnp.roll(tours, -1, axis=-1)
-    lengths = dist[tours, nxt].sum(-1)
+    lengths = tsp.edge_sum(dist[tours, nxt])
     return TourResult(tours, lengths)
 
 

@@ -48,21 +48,35 @@ class TSPInstance:
             return np.asarray(self.dist_matrix, dtype=np.float32)
         assert self.coords is not None
         xy = self.coords.astype(np.float64)
-        diff = xy[:, None, :] - xy[None, :, :]
-        if self.edge_weight_type == "EUC_2D":
-            d = np.rint(np.sqrt((diff**2).sum(-1)))
-        elif self.edge_weight_type == "CEIL_2D":
-            d = np.ceil(np.sqrt((diff**2).sum(-1)))
-        elif self.edge_weight_type == "ATT":
-            rij = np.sqrt((diff**2).sum(-1) / 10.0)
-            tij = np.rint(rij)
-            d = np.where(tij < rij, tij + 1.0, tij)
-        elif self.edge_weight_type == "RAW":  # no rounding (synthetic)
-            d = np.sqrt((diff**2).sum(-1))
-        else:
-            raise ValueError(f"unsupported edge_weight_type {self.edge_weight_type}")
+        d = pairwise_distances(xy, xy, self.edge_weight_type)
         np.fill_diagonal(d, 0.0)
         return d.astype(np.float32)
+
+
+def pairwise_distances(xy_a: np.ndarray, xy_b: np.ndarray,
+                       edge_weight_type: str) -> np.ndarray:
+    """(a, b) float64 TSPLIB-rounded distances between two coordinate sets.
+
+    The single source of the rounding rules: ``TSPInstance.distances`` runs
+    the full (n, n) matrix through it, and the sparse candidate builder
+    (repro.sparse.store) runs row *chunks* through it — the same float64
+    arithmetic followed by the same float32 cast downstream, so a candidate
+    edge's stored distance is bitwise the dense matrix entry.
+    """
+    xy_a = np.asarray(xy_a, np.float64)
+    xy_b = np.asarray(xy_b, np.float64)
+    diff = xy_a[:, None, :] - xy_b[None, :, :]
+    if edge_weight_type == "EUC_2D":
+        return np.rint(np.sqrt((diff**2).sum(-1)))
+    if edge_weight_type == "CEIL_2D":
+        return np.ceil(np.sqrt((diff**2).sum(-1)))
+    if edge_weight_type == "ATT":
+        rij = np.sqrt((diff**2).sum(-1) / 10.0)
+        tij = np.rint(rij)
+        return np.where(tij < rij, tij + 1.0, tij)
+    if edge_weight_type == "RAW":  # no rounding (synthetic)
+        return np.sqrt((diff**2).sum(-1))
+    raise ValueError(f"unsupported edge_weight_type {edge_weight_type}")
 
 
 def random_instance(n: int, seed: int = 0, box: float = 1000.0) -> TSPInstance:
@@ -99,13 +113,56 @@ def grid_instance(side: int) -> TSPInstance:
     )
 
 
-SUPPORTED_EDGE_WEIGHT_TYPES = ("EUC_2D", "CEIL_2D", "ATT")
+SUPPORTED_EDGE_WEIGHT_TYPES = ("EUC_2D", "CEIL_2D", "ATT", "EXPLICIT")
+SUPPORTED_EDGE_WEIGHT_FORMATS = ("FULL_MATRIX", "UPPER_ROW", "LOWER_ROW",
+                                 "UPPER_DIAG_ROW", "LOWER_DIAG_ROW")
+
+_SECTION_KEYWORDS = ("NODE_COORD_SECTION", "EDGE_WEIGHT_SECTION",
+                     "DISPLAY_DATA_SECTION", "FIXED_EDGES_SECTION",
+                     "TOUR_SECTION", "EOF")
+
+
+def _explicit_matrix(values: list[float], n: int, fmt: str) -> np.ndarray:
+    """Assemble a symmetric (n, n) matrix from an EDGE_WEIGHT_SECTION stream."""
+    need = {
+        "FULL_MATRIX": n * n,
+        "UPPER_ROW": n * (n - 1) // 2,
+        "LOWER_ROW": n * (n - 1) // 2,
+        "UPPER_DIAG_ROW": n * (n + 1) // 2,
+        "LOWER_DIAG_ROW": n * (n + 1) // 2,
+    }[fmt]
+    if len(values) < need:
+        raise ValueError(
+            f"EDGE_WEIGHT_SECTION has {len(values)} values; "
+            f"{fmt} with DIMENSION {n} needs {need}")
+    vals = np.asarray(values[:need], dtype=np.float64)
+    d = np.zeros((n, n), dtype=np.float64)
+    if fmt == "FULL_MATRIX":
+        d = vals.reshape(n, n)
+    else:
+        diag = fmt.endswith("DIAG_ROW")
+        upper = fmt.startswith("UPPER")
+        iu = (np.triu_indices(n, 0 if diag else 1) if upper
+              else np.tril_indices(n, 0 if diag else -1))
+        d[iu] = vals
+        d = d + d.T - np.diag(np.diag(d))
+    np.fill_diagonal(d, 0.0)
+    return d.astype(np.float32)
 
 
 def parse_tsplib(text: str, name: str = "tsplib") -> TSPInstance:
-    """Minimal TSPLIB .tsp parser (NODE_COORD_SECTION, EUC_2D/ATT/CEIL_2D)."""
+    """TSPLIB .tsp parser.
+
+    Supported: NODE_COORD_SECTION instances with EUC_2D / ATT / CEIL_2D
+    rounding (the paper's benchmark families, pr1002/pr2392 included) and
+    EXPLICIT distance matrices (EDGE_WEIGHT_SECTION in FULL_MATRIX /
+    UPPER_ROW / LOWER_ROW / UPPER_DIAG_ROW / LOWER_DIAG_ROW formats).
+    DISPLAY_DATA_SECTION blocks (display-only coordinates some EXPLICIT
+    instances carry) are skipped.  Anything else is rejected eagerly with
+    the exact field that is unsupported, not deep inside a solve.
+    """
     ewt = "EUC_2D"
-    m = re.search(r"EDGE_WEIGHT_TYPE\s*:\s*(\w+)", text)
+    m = re.search(r"EDGE_WEIGHT_TYPE\s*:\s*([\w_]+)", text)
     if m:
         ewt = m.group(1)
     if ewt not in SUPPORTED_EDGE_WEIGHT_TYPES:
@@ -115,22 +172,84 @@ def parse_tsplib(text: str, name: str = "tsplib") -> TSPInstance:
     nm = re.search(r"NAME\s*:\s*(\S+)", text)
     if nm:
         name = nm.group(1)
-    lines = text.splitlines()
-    coords = []
-    in_sec = False
-    for ln in lines:
+    fmt = None
+    fm = re.search(r"EDGE_WEIGHT_FORMAT\s*:\s*([\w_]+)", text)
+    if fm:
+        fmt = fm.group(1)
+    dim = None
+    dm = re.search(r"DIMENSION\s*:?\s*(\d+)", text)
+    if dm:
+        dim = int(dm.group(1))
+
+    coords: list[tuple[float, float]] = []
+    weights: list[float] = []
+    section = None
+    for ln in text.splitlines():
         s = ln.strip()
-        if s.startswith("NODE_COORD_SECTION"):
-            in_sec = True
+        if not s:
             continue
-        if in_sec:
-            if s == "EOF" or not s:
+        head = s.split()[0].rstrip(":")
+        if head in _SECTION_KEYWORDS:
+            section = head
+            if section == "EOF":
                 break
+            continue
+        if section == "NODE_COORD_SECTION":
             parts = s.split()
             coords.append((float(parts[1]), float(parts[2])))
+        elif section == "EDGE_WEIGHT_SECTION":
+            weights.extend(float(v) for v in s.split())
+        # DISPLAY_DATA_SECTION / other sections: skipped
+
+    if ewt == "EXPLICIT":
+        if fmt is None:
+            raise ValueError(
+                "EDGE_WEIGHT_TYPE EXPLICIT needs an EDGE_WEIGHT_FORMAT field")
+        if fmt not in SUPPORTED_EDGE_WEIGHT_FORMATS:
+            raise ValueError(
+                f"unsupported EDGE_WEIGHT_FORMAT {fmt!r}; supported: "
+                f"{', '.join(SUPPORTED_EDGE_WEIGHT_FORMATS)}")
+        if not weights:
+            raise ValueError("EXPLICIT instance has no EDGE_WEIGHT_SECTION")
+        if dim is None:
+            raise ValueError("EXPLICIT instance has no DIMENSION field")
+        return TSPInstance(name=name,
+                           dist_matrix=_explicit_matrix(weights, dim, fmt),
+                           edge_weight_type="EXPLICIT")
+
     if not coords:
         raise ValueError("no NODE_COORD_SECTION found")
+    if dim is not None and len(coords) != dim:
+        raise ValueError(
+            f"NODE_COORD_SECTION has {len(coords)} rows, DIMENSION says {dim}")
     return TSPInstance(name=name, coords=np.asarray(coords), edge_weight_type=ewt)
+
+
+def load_tsplib(path) -> TSPInstance:
+    """Parse a .tsp file from disk (fetch-free fixture path)."""
+    import os
+    with open(path) as f:
+        return parse_tsplib(f.read(), name=os.path.splitext(
+            os.path.basename(path))[0])
+
+
+def find_tsplib(name: str, dirs=("examples", ".")) -> Optional[TSPInstance]:
+    """Look for ``<name>.tsp`` under the given directories (repo root first).
+
+    The fixture path for paper-scale instances: drop e.g. ``pr2392.tsp``
+    into ``examples/`` and benchmarks pick it up — no network fetch, no
+    data files shipped in the repo.  Returns None when absent so callers
+    can fall back to synthetic instances of the same size.
+    """
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    for d in dirs:
+        for base in (d, os.path.join(root, d)):
+            p = os.path.join(base, f"{name}.tsp")
+            if os.path.exists(p):
+                return load_tsplib(p)
+    return None
 
 
 def pad_instance(instance: TSPInstance, n_pad: int) -> TSPInstance:
@@ -156,12 +275,51 @@ def pad_instance(instance: TSPInstance, n_pad: int) -> TSPInstance:
                        known_optimum=instance.known_optimum)
 
 
-def nn_lists(dist: Array, k: int) -> Array:
-    """(n, k) int32 nearest-neighbour lists, self excluded (paper §II, nn=15..40)."""
+def nn_lists(dist: Array, k: int, n_actual: Optional[int] = None) -> Array:
+    """(n, min(k, n-1)) int32 nearest-neighbour lists, self excluded.
+
+    Paper §II (nn = 15..40), hardened for the solver/sparse subsystems:
+
+    - ``k >= n-1`` clamps to n-1 (a city has at most n-1 neighbours) instead
+      of erroring inside top_k;
+    - ties on equal distances break **deterministically by city index**
+      (stable argsort), so candidate lists are reproducible across runs and
+      backends — grid instances have massive distance ties;
+    - ``n_actual`` (padded instances, DESIGN.md §8): phantom cities
+      (index >= n_actual) never appear in any list.  Surplus positions — a
+      row needs k entries but only n_actual-1 real neighbours exist, or the
+      row itself is phantom — are filled with the **row's own index**: the
+      current city is always visited, so a self entry is masked to weight 0
+      by every selection rule and is never selectable (the same sentinel the
+      sparse overflow slots use).
+    """
     n = dist.shape[0]
+    k = max(1, min(k, n - 1))
     d = dist + jnp.eye(n, dtype=dist.dtype) * jnp.finfo(dist.dtype).max
-    _, idx = jax.lax.top_k(-d, k)
-    return idx.astype(jnp.int32)
+    idx = jnp.argsort(d, axis=-1, stable=True)[:, :k].astype(jnp.int32)
+    if n_actual is not None:
+        self_idx = jnp.arange(n, dtype=jnp.int32)[:, None]
+        na = jnp.asarray(n_actual, jnp.int32)
+        idx = jnp.where((idx < na) & (self_idx < na), idx, self_idx)
+    return idx
+
+
+def edge_sum(d: Array) -> Array:
+    """Associativity-fixed sum over the last axis (per-edge lengths -> tour
+    length): explicit pairwise halving built from elementwise adds, which
+    XLA cannot re-associate.  A plain ``.sum(-1)`` compiles to different
+    reduction splits in different program contexts (observed: the dense
+    construction program and the sparse one disagreed by 1 ulp), which
+    would silently void every cross-route bitwise length contract — the
+    dense/sparse k = n-1 equivalence, batched == solo, kernel == ref.
+    Every tour-length reduction in the repo goes through this helper.
+    """
+    while d.shape[-1] > 1:
+        if d.shape[-1] % 2:
+            d = jnp.concatenate(
+                [d, jnp.zeros(d.shape[:-1] + (1,), d.dtype)], axis=-1)
+        d = d[..., 0::2] + d[..., 1::2]
+    return d[..., 0]
 
 
 def tour_length(dist: Array, tour: Array, n_actual: Optional[Array] = None) -> Array:
@@ -175,13 +333,12 @@ def tour_length(dist: Array, tour: Array, n_actual: Optional[Array] = None) -> A
     """
     nxt = jnp.roll(tour, -1, axis=-1)
     if n_actual is None:
-        return jnp.take_along_axis(
-            dist[tour], nxt[..., None], axis=-1
-        )[..., 0].sum(-1)
+        return edge_sum(jnp.take_along_axis(
+            dist[tour], nxt[..., None], axis=-1)[..., 0])
     idx = jnp.arange(tour.shape[-1], dtype=jnp.int32)
     nxt = jnp.where(idx == n_actual - 1, tour[..., :1], nxt)
     d = jnp.take_along_axis(dist[tour], nxt[..., None], axis=-1)[..., 0]
-    return jnp.where(idx < n_actual, d, 0.0).sum(-1)
+    return edge_sum(jnp.where(idx < n_actual, d, 0.0))
 
 
 def heuristic_matrix(dist: Array) -> Array:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from . import choice_info as _ci
 from . import fused_select as _fs
 from . import pheromone_update as _pu
+from . import sparse_select as _ss
 from . import tour_select as _ts
 from . import two_opt as _to
 
@@ -38,22 +39,84 @@ class UnsupportedKernelRoute(NotImplementedError):
     """A config/problem combination the kernels genuinely cannot serve."""
 
 
-def check_kernel_route(masked: bool = False, hyper: bool = False) -> None:
-    """Validate that the kernel route supports this problem shape.
+def check_kernel_route(masked: bool = False, hyper: bool = False,
+                       sparse: bool = False,
+                       selection: Optional[str] = None,
+                       local_search: Optional[str] = None,
+                       construction: Optional[str] = None,
+                       streaming: bool = False,
+                       mesh: bool = False) -> None:
+    """Validate that the kernel/sparse route supports this problem shape.
 
-    Support matrix (DESIGN.md §10): masked (padded) instances are fully
-    supported; per-instance Hyper operands are not — kernel exponents
-    alpha/beta are static compile-time parameters, a traced per-slot
-    exponent has no kernel specialisation to dispatch to.
+    The single typed rejection point (DESIGN.md §10/§12 support matrix):
+    every route combination the kernels or the sparse representation
+    genuinely cannot serve raises ``UnsupportedKernelRoute`` with one
+    actionable line here, up front, instead of failing deep in a trace.
+
+    - masked (padded) instances: fully supported everywhere (dense kernels
+      and the sparse route, except sparse Partial-ACO — window positions
+      index the real tour, so padded instances must run unpadded);
+    - per-instance ``Hyper`` operands: unsupported on the Pallas route
+      (kernel exponents are static) *and* on the sparse route (sparse
+      programs specialise on static alpha/beta for the same reason);
+    - sparse x roulette: inverse-CDF sampling needs a full choice row's
+      cumsum — candidate pages cannot express it;
+    - sparse x local search: 2-opt/Or-opt evaluate arbitrary (i, j) edges
+      against the dense distance matrix;
+    - sparse x streaming / mesh sharding: not wired yet (the batched
+      sparse engine route is; see DESIGN.md §12 route matrix).
     """
-    del masked  # supported everywhere since the mask-aware route overhaul
     if hyper:
+        if sparse:
+            raise UnsupportedKernelRoute(
+                "the sparse route cannot serve per-instance Hyper "
+                "operands: sparse programs specialise on static "
+                "alpha/beta. Drop the Hyper profiles or run the dense "
+                "pure-JAX route (sparse=False, use_pallas=False).")
         raise UnsupportedKernelRoute(
             "use_pallas=True cannot serve per-instance Hyper operands: "
             "kernel alpha/beta are static compile-time parameters, but "
             "Hyper carries traced per-instance exponents. Run the "
             "pure-JAX route (use_pallas=False) for per-instance "
             "hyperparameters, or drop Problem.hyper.")
+    if not sparse:
+        return
+    if selection == "roulette":
+        raise UnsupportedKernelRoute(
+            "sparse construction cannot serve selection='roulette': "
+            "inverse-CDF sampling needs the full choice row's cumsum, "
+            "which candidate pages do not hold. Use selection="
+            "'iroulette', 'gumbel' or 'greedy', or run sparse=False.")
+    if local_search is not None and local_search != "none":
+        raise UnsupportedKernelRoute(
+            f"sparse route cannot serve local_search={local_search!r}: "
+            "2-opt/Or-opt moves evaluate arbitrary city pairs against "
+            "the dense (n, n) distance matrix. Set local_search='none' "
+            "or run sparse=False.")
+    if construction is not None and construction not in ("data_parallel",
+                                                         "partial"):
+        raise UnsupportedKernelRoute(
+            f"sparse route has no construction={construction!r}: the "
+            "candidate-page step replaces the dense strategy ladder. Use "
+            "construction='data_parallel' (standard) or 'partial' "
+            "(Partial-ACO mutation), or run sparse=False.")
+    if construction == "partial" and masked:
+        raise UnsupportedKernelRoute(
+            "sparse Partial-ACO cannot run on padded (masked) instances: "
+            "mutation windows index positions of the real best tour. Run "
+            "the instance unpadded (solo run_sparse) or use "
+            "construction='data_parallel'.")
+    if streaming:
+        raise UnsupportedKernelRoute(
+            "sparse instances are not wired into the streaming pool yet: "
+            "slot surgery assumes dense (n, n) ColonyState buffers. Use "
+            "the batched sparse engine route (solver.engine."
+            "solve_instances with sparse=True) or stream dense.")
+    if mesh:
+        raise UnsupportedKernelRoute(
+            "sparse batches are not wired through mesh sharding yet: the "
+            "placement layer shards dense Problem pytrees. Run sparse "
+            "batches single-device (mesh=None) or shard dense.")
 
 
 def choice_info(tau: jax.Array, eta: jax.Array, alpha: float = 1.0,
@@ -79,6 +142,19 @@ def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
     without materialising the (m, n) weight matrix (kernels/fused_select)."""
     return _fs.fused_select(tau, eta, cur, visited, rand, alpha, beta,
                             n_actual, mode, interpret=INTERPRET)
+
+
+def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
+                  cand: jax.Array, visited: jax.Array, rand: jax.Array,
+                  alpha: float = 1.0, beta: float = 2.0,
+                  mode: str = "iroulette") -> tuple[jax.Array, jax.Array]:
+    """Sparse candidate-page selection: gather visited/rand at the K
+    candidate cities, weight tau^a * eta^b, mask, select — one kernel,
+    no (m, n) weight tensor (kernels/sparse_select).  Returns (pos, have):
+    the winning page position and whether a selectable candidate exists
+    (the sparse construction step's nearest-unvisited fallback trigger)."""
+    return _ss.sparse_select(tau_rows, eta_rows, cand, visited, rand,
+                             alpha, beta, mode, interpret=INTERPRET)
 
 
 def tour_select_step(selection: str = "iroulette"):

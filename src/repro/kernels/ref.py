@@ -53,6 +53,41 @@ def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
     return tour_select(rows, visited, rand, mode, n_actual)
 
 
+def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
+                  cand: jax.Array, visited: jax.Array, rand: jax.Array,
+                  alpha: float = 1.0, beta: float = 2.0,
+                  mode: str = "iroulette") -> tuple[jax.Array, jax.Array]:
+    """Oracle for the sparse candidate-page selection kernel.
+
+    tau_rows/eta_rows (m, K) candidate-page values; cand (m, K) city ids
+    (< 0 = padding); visited (m, n); rand (m, n) full-width draws gathered
+    at the candidate cities.  Returns (pos, have) like the kernel: the
+    page position of the argmax score and whether any unvisited
+    positive-weight candidate exists.
+    """
+    m = cand.shape[0]
+    ants = jnp.arange(m)
+    safe = jnp.where(cand >= 0, cand, 0)
+    gv = jnp.where(cand >= 0,
+                   visited[ants[:, None], safe].astype(jnp.float32), 0.0)
+    gr = jnp.where(cand >= 0, rand[ants[:, None], safe], 0.0)
+    w = choice_info(tau_rows, eta_rows, alpha, beta)
+    mask = (gv == 0).astype(w.dtype)
+    if mode == "iroulette":
+        v = w * gr * mask
+    elif mode == "gumbel":
+        g = -jnp.log(-jnp.log(jnp.clip(gr, 1e-12, 1.0 - 1e-7)))
+        valid = (w > 0) & (mask > 0)
+        v = jnp.where(valid, jnp.log(jnp.maximum(w, 1e-38)) + g, _NEG_INF)
+    elif mode == "greedy":
+        v = jnp.where(mask > 0, w, _NEG_INF)
+    else:
+        raise ValueError(mode)
+    pos = jnp.argmax(v, axis=-1).astype(jnp.int32)
+    have = ((w * mask).sum(-1) > 0).astype(jnp.int32)
+    return pos, have
+
+
 def select_move(delta: jax.Array, valid: jax.Array, thr: float = 0.0,
                 mode: str = "best") -> tuple[jax.Array, jax.Array]:
     """Local-search move selection over an (m, M) move-delta tensor.

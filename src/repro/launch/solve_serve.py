@@ -13,9 +13,16 @@ batch jobs shard their instance axis across the devices; streaming mode
 runs one resident pool per device.  ``--devices`` bounds the mesh (default
 all local devices).
 
+``--sparse`` swaps the dense (n, n) pipeline for the candidate-list
+O(n*k) paged representation (DESIGN.md §12) in the drain-the-queue mode;
+sparse x streaming / sharding / local-search combinations exit 2 with the
+route checker's one-line reason.
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.solve_serve \
         --num-instances 8 --min-n 12 --max-n 48 --iterations 20
+    PYTHONPATH=src python -m repro.launch.solve_serve --sparse \
+        --sparse-k 16 --num-instances 6 --iterations 10 --variant mmas
     PYTHONPATH=src python -m repro.launch.solve_serve --stream \
         --num-instances 8 --arrival-rate 4 --chunk 2 --iterations 10
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -85,6 +92,16 @@ def main() -> None:
     ap.add_argument("--use-pallas", action="store_true",
                     help="route choice/construction/deposit through the "
                          "mask-aware Pallas kernels (interpret mode on CPU)")
+    # sparse/paged representation (DESIGN.md §12)
+    ap.add_argument("--sparse", action="store_true",
+                    help="candidate-list-restricted O(n*k) representation: "
+                         "no resident (n, n) tensor; incompatible with "
+                         "--stream/--shard and local search")
+    ap.add_argument("--sparse-k", type=int, default=32,
+                    help="--sparse: candidate-list width per city")
+    ap.add_argument("--sparse-overflow", type=int, default=4,
+                    help="--sparse: per-city off-list adoption slots "
+                         "(0 disables adoption)")
     # multi-device fabric (placement layer, DESIGN.md §11)
     ap.add_argument("--shard", action="store_true",
                     help="shard the solver over a 1-D device mesh: batch "
@@ -111,7 +128,9 @@ def main() -> None:
     cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
                         selection=args.selection,
                         local_search=args.local_search, seed=args.seed,
-                        use_pallas=args.use_pallas)
+                        use_pallas=args.use_pallas, sparse=args.sparse,
+                        sparse_k=args.sparse_k,
+                        sparse_overflow=args.sparse_overflow)
     mesh = make_data_mesh(args.devices) if args.shard else None
 
     try:
@@ -143,12 +162,10 @@ def main() -> None:
             svc.submit(inst)
         results = svc.run()
         _report(results, svc.stats)
-    except UnsupportedKernelRoute:
-        # one actionable line instead of a traceback (DESIGN.md §10: the
-        # only kernel-unsupported config is per-instance Hyper operands)
-        print("solve_serve: --use-pallas cannot serve --per-instance-hyper "
-              "(kernel alpha/beta are static, Hyper operands are traced); "
-              "drop one of the two flags", file=sys.stderr)
+    except UnsupportedKernelRoute as e:
+        # one actionable line instead of a traceback (DESIGN.md §10/§12:
+        # the route checker's message already says which flag to drop)
+        print(f"solve_serve: {e}", file=sys.stderr)
         sys.exit(2)
 
 

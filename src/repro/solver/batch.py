@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aco, tsp
+from repro.sparse import store as sparse_store
 
 
 def bucket_size(n: int, min_bucket: int = 16) -> int:
@@ -96,6 +97,52 @@ def make_batch(instances, n_pad: int | None = None, nn_k: int = 30,
                 for i, h in zip(instances, hypers)]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *problems)
     return ProblemBatch(problem=stacked, instances=instances, n_pad=n_pad)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseBatch:
+    """B sparse instances padded to one (n_pad, k) page bucket.
+
+    Duck-typed against ProblemBatch where it matters (``instances`` /
+    ``n_pad``), so ``engine.collect`` serves both.  ``ewt`` is the shared
+    TSPLIB rounding rule — static to the compiled sparse program, so a
+    bucket cannot mix rounding rules the way it can mix coordinates.
+    """
+    problem: sparse_store.SparseProblem   # leaves (B, ...); n_actual (B,)
+    instances: tuple[tsp.TSPInstance, ...]
+    n_pad: int
+    k: int
+    ewt: str
+
+    @property
+    def size(self) -> int:
+        return len(self.instances)
+
+
+def make_sparse_batch(instances, k: int, n_pad: int | None = None,
+                      min_bucket: int = 16) -> SparseBatch:
+    """Stack sparse problems into one (n_pad, k) bucket.
+
+    Every slot carries ``n_actual`` (even exact-fit ones) so the stacked
+    pytree structure is uniform and the vmapped step masks per slot.
+    """
+    instances = tuple(instances)
+    if not instances:
+        raise ValueError("empty batch")
+    ewts = {i.edge_weight_type for i in instances}
+    if len(ewts) > 1:
+        raise ValueError(
+            f"sparse bucket mixes edge weight types {sorted(ewts)}: the "
+            "rounding rule is static per compiled sparse program")
+    if n_pad is None:
+        n_pad = bucket_size(max(i.n for i in instances), min_bucket)
+    problems = [
+        sparse_store.make_sparse_problem(i, k, n_pad)._replace(
+            n_actual=jnp.asarray(i.n, jnp.int32))
+        for i in instances]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *problems)
+    return SparseBatch(problem=stacked, instances=instances, n_pad=n_pad,
+                       k=k, ewt=ewts.pop())
 
 
 def group_by_bucket(sizes, min_bucket: int = 16) -> dict[int, list[int]]:

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aco, tsp
+from repro.sparse import aco as sparse_aco
 
 from . import batch as batch_mod
 
@@ -82,11 +83,27 @@ def init_states(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
-def _run_batch_impl(problem: aco.Problem, states: aco.ColonyState,
-                    budgets: Array, cfg: aco.ACOConfig, max_iters: int,
-                    patience: int, since: Array
-                    ) -> tuple[aco.ColonyState, Array]:
-    step = jax.vmap(lambda p, s: aco.colony_step(p, s, cfg)[0])
+def init_sparse_states(instances: Sequence[tsp.TSPInstance],
+                       cfg: aco.ACOConfig, seeds: Sequence[int],
+                       n_pad: int) -> sparse_aco.SparseColonyState:
+    """Stacked SparseColonyState for one (n_pad, k) bucket.
+
+    Mirrors ``init_states``: tau0 per *real* instance, one slot per
+    instance, leaves stacked on a leading B axis.
+    """
+    states = [sparse_aco.init_sparse_colony(inst, cfg, seed, n_pad)
+              for inst, seed in zip(instances, seeds)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _run_batch_impl(problem, states, budgets: Array, cfg: aco.ACOConfig,
+                    max_iters: int, patience: int, since: Array,
+                    kind: str = "dense", ewt: str = "EUC_2D"):
+    if kind == "sparse":
+        step = jax.vmap(
+            lambda p, s: sparse_aco.sparse_colony_step(p, s, cfg, ewt)[0])
+    else:
+        step = jax.vmap(lambda p, s: aco.colony_step(p, s, cfg)[0])
 
     def done_mask(st: aco.ColonyState, since: Array) -> Array:
         d = st.iteration >= budgets
@@ -117,7 +134,7 @@ def _run_batch_impl(problem: aco.Problem, states: aco.ColonyState,
     return states, since
 
 
-_STATIC = ("cfg", "max_iters", "patience")
+_STATIC = ("cfg", "max_iters", "patience", "kind", "ewt")
 _run_batch_jit = jax.jit(_run_batch_impl, static_argnames=_STATIC)
 # Donating variant: the incoming stacked ColonyState (arg 1) and stagnation
 # counters (arg 6) alias the outputs, so a resident pool's chunk step
@@ -129,11 +146,11 @@ _run_batch_donated = jax.jit(_run_batch_impl, static_argnames=_STATIC,
                              donate_argnums=(1, 6))
 
 
-def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
+def run_batch(problem, states, budgets: Array,
               cfg: aco.ACOConfig, max_iters: int, patience: int = 0,
               since: Optional[Array] = None, donate: bool = False,
-              mesh=None, instance_spec: str = "data"
-              ) -> tuple[aco.ColonyState, Array]:
+              mesh=None, instance_spec: str = "data",
+              kind: str = "dense", ewt: str = "EUC_2D"):
     """Advance B colonies by up to ``max_iters`` more iterations each.
 
     budgets: (B,) int32 *absolute* per-instance iteration targets, compared
@@ -158,6 +175,12 @@ def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
     if since is None:
         since = jnp.zeros_like(budgets)
     if mesh is not None:
+        if kind == "sparse":
+            from repro.kernels import ops as kops
+            kops.check_kernel_route(sparse=True, mesh=True,
+                                    selection=cfg.selection,
+                                    local_search=cfg.local_search,
+                                    construction=cfg.construction)
         from . import placement
         return placement.run_batch_sharded(problem, states, budgets, cfg,
                                            max_iters, patience, since, mesh,
@@ -165,7 +188,8 @@ def run_batch(problem: aco.Problem, states: aco.ColonyState, budgets: Array,
     if donate:
         _quiet_cpu_donation_warning()
     fn = _run_batch_donated if donate else _run_batch_jit
-    return fn(problem, states, budgets, cfg, max_iters, patience, since)
+    return fn(problem, states, budgets, cfg, max_iters, patience, since,
+              kind=kind, ewt=ewt)
 
 
 def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
@@ -174,19 +198,33 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
                     n_pad: Optional[int] = None, patience: int = 0,
                     nn_k: Optional[int] = None,
                     hypers: Optional[Sequence[aco.Hyper]] = None,
-                    mesh=None
-                    ) -> tuple[aco.ColonyState, batch_mod.ProblemBatch]:
+                    mesh=None):
     """Convenience one-shot: batch, init, run. All instances in one bucket.
 
     ``hypers``: per-instance alpha/beta/rho/q profiles (aco.Hyper); one
     bucket then mixes tuning profiles in a single compiled program.
     ``mesh``: shard the instance axis over the mesh (placement layer).
+    ``cfg.sparse`` routes the whole bucket through the O(n*k) paged
+    representation (returns (stacked SparseColonyState, SparseBatch));
+    unsupported sparse combinations raise ``UnsupportedKernelRoute``.
     """
     instances = tuple(instances)
     its = list(iterations) if iterations is not None else \
         [cfg.iterations] * len(instances)
     sds = list(seeds) if seeds is not None else \
         [cfg.seed + i for i in range(len(instances))]
+    if cfg.sparse:
+        if hypers is not None and any(h is not None for h in hypers):
+            from repro.kernels import ops as kops
+            kops.check_kernel_route(hyper=True, sparse=True)
+        sb = batch_mod.make_sparse_batch(instances, cfg.sparse_k, n_pad)
+        sparse_aco.check_sparse_route(cfg, masked=True)
+        sstates = init_sparse_states(instances, cfg, sds, sb.n_pad)
+        budgets = jnp.asarray(its, jnp.int32)
+        sstates, _ = run_batch(sb.problem, sstates, budgets, cfg,
+                               int(max(its)), patience, donate=True,
+                               mesh=mesh, kind="sparse", ewt=sb.ewt)
+        return sstates, sb
     b = batch_mod.make_batch(instances, n_pad,
                              nn_k if nn_k is not None else cfg.nn_k,
                              hypers=hypers)
@@ -198,8 +236,13 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
     return states, b
 
 
-def collect(states: aco.ColonyState, b: batch_mod.ProblemBatch) -> list[dict]:
-    """Host-side per-instance results with phantom tails trimmed."""
+def collect(states, b) -> list[dict]:
+    """Host-side per-instance results with phantom tails trimmed.
+
+    Duck-typed over dense ``ProblemBatch`` and sparse ``SparseBatch``:
+    both carry ``instances``, both states stacks carry
+    best_len/best_tour/iteration.
+    """
     lens = np.asarray(states.best_len)
     its = np.asarray(states.iteration)
     tours = np.asarray(states.best_tour)

@@ -73,6 +73,15 @@ class SolverService:
         if cfg.deposit not in pheromone.STRATEGIES:
             raise ValueError(f"unknown deposit strategy {cfg.deposit!r}; "
                              f"supported: {', '.join(pheromone.STRATEGIES)}")
+        if cfg.sparse:
+            # fail at construction, not mid-drain: batched slots are always
+            # padded (masked), and a mesh needs the dense placement layer
+            from repro.kernels import ops as kops
+            kops.check_kernel_route(masked=True, sparse=True,
+                                    selection=cfg.selection,
+                                    local_search=cfg.local_search,
+                                    construction=cfg.construction,
+                                    mesh=mesh is not None)
         self.cfg = cfg
         self.max_batch = max_batch
         self.min_bucket = min_bucket
@@ -151,9 +160,18 @@ class SolverService:
         job_id = self._jobs_run
         self._jobs_run += 1
 
-        b = batch_mod.make_batch(instances, bucket, self.cfg.nn_k)
+        if self.cfg.sparse:
+            b = batch_mod.make_sparse_batch(instances, self.cfg.sparse_k,
+                                            bucket)
+            init = lambda: engine.init_sparse_states(instances, self.cfg,
+                                                     seeds, bucket)
+            kind, ewt = "sparse", b.ewt
+        else:
+            b = batch_mod.make_batch(instances, bucket, self.cfg.nn_k)
+            init = lambda: engine.init_states(instances, self.cfg, seeds,
+                                              bucket)
+            kind, ewt = "dense", "EUC_2D"
         budgets = jnp.asarray(budgets_list, jnp.int32)
-        init = lambda: engine.init_states(instances, self.cfg, seeds, bucket)
 
         t0 = time.perf_counter()
         if self.checkpoint_dir:
@@ -172,12 +190,13 @@ class SolverService:
                 lambda: (init(), jnp.zeros_like(budgets)),
                 lambda st, i: engine.run_batch(
                     b.problem, st[0], budgets, self.cfg, chunk,
-                    self.patience, st[1], mesh=self.mesh))
+                    self.patience, st[1], mesh=self.mesh, kind=kind,
+                    ewt=ewt))
             states, _ = sup.run()
         else:
             states, _ = engine.run_batch(b.problem, init(), budgets,
                                          self.cfg, max_it, self.patience,
-                                         mesh=self.mesh)
+                                         mesh=self.mesh, kind=kind, ewt=ewt)
         states.best_len.block_until_ready()
         solve_s = time.perf_counter() - t0
 

@@ -272,6 +272,13 @@ class StreamingSolverService:
             # static ones.  Fail eagerly with the kernels' own typed error.
             from repro.kernels import ops as kops
             kops.check_kernel_route(hyper=True)
+        if cfg.sparse:
+            # slot surgery assumes dense (n, n) ColonyState buffers
+            from repro.kernels import ops as kops
+            kops.check_kernel_route(sparse=True, streaming=True,
+                                    selection=cfg.selection,
+                                    local_search=cfg.local_search,
+                                    construction=cfg.construction)
         if cfg.deposit not in pheromone.STRATEGIES:
             raise ValueError(f"unknown deposit strategy {cfg.deposit!r}; "
                              f"supported: {', '.join(pheromone.STRATEGIES)}")

@@ -1,0 +1,325 @@
+"""Sparse tour construction: selection over k-wide candidate rows.
+
+One construction step of the dense data-parallel strategy gathers an
+(m, n) choice row per ant; here an ant sees only its current city's
+candidate page — (m, k) pheromone/eta gathered from the (n, k) store,
+extended by the city's O overflow slots (adopted off-list edges,
+sparse/pheromone.py) — plus a lazily-computed nearest-unvisited fallback
+for the steps where an ant has exhausted its whole candidate set.  No
+(n, n) tensor exists on this route; per-step transients are (m, n)
+(random draws, tabu) and (m, k+O).
+
+Bitwise contract with the dense route at k = n-1 (tests/test_sparse.py):
+
+- random draws are **full-width**: the same ``fold_in(kc, t)`` key draws
+  the same (m, n) uniform/Gumbel tensor the dense selector draws, and the
+  sparse step *gathers* it at candidate cities.  Weighted scores at a city
+  are then bitwise the dense scores (same tau/eta/mask values, same
+  multiply order), so the argmax winner is the same city — candidate
+  order only permutes positions, and argmax ties cannot arise among
+  distinct positive scores;
+- per-edge distances come from the candidate page (stored values are
+  bitwise the dense matrix entries) and are assembled into the same
+  (m, n) edge array the dense ``_finish`` builds, summed on the same
+  axis — identical reduction order, identical lengths.
+
+Partial-ACO (Chitty, "Applying ACO To Large Scale TSP Instances"): each
+ant copies the running best tour and reconstructs only a bounded window
+of w cities through the same candidate-page selection, so one iteration
+costs O(m·w·k) + O(w·n) fallback transients instead of O(m·n·k) — the
+route that keeps very large n inside a fixed per-iteration budget.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import strategies, tsp
+from repro.core.strategies import TourResult
+
+from . import store
+from .store import SparseProblem
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def _candidate_page(problem: SparseProblem, tau: Array, ovf_city: Array,
+                    ovf_tau: Array, cur: Array, ewt: str
+                    ) -> tuple[Array, Array, Array, Array]:
+    """Gather the extended candidate row for each ant's current city.
+
+    Returns (cities, tau_row, eta_row, dist_row), all (m, k+O).  Overflow
+    slots are appended after the k candidates; empty slots map to the
+    ant's own (always-visited) city, so every selection rule masks them to
+    weight 0 — the same self-sentinel ``tsp.nn_lists`` uses for surplus
+    positions.  Overflow eta/distances are lazy (float32 page-fault path):
+    at k = n-1 every slot is empty, so the bitwise contract never sees a
+    lazy value.
+    """
+    cities = problem.cand[cur]                       # (m, k)
+    tau_row = tau[cur]
+    eta_row = problem.cand_eta[cur]
+    dist_row = problem.cand_dist[cur]
+    o = ovf_city.shape[-1]
+    if o:
+        oc = ovf_city[cur]                           # (m, O)
+        oc = jnp.where(oc >= 0, oc, cur[:, None]).astype(jnp.int32)
+        od = store.lazy_pair(problem.coords, jnp.broadcast_to(
+            cur[:, None], oc.shape), oc, ewt)
+        oe = 1.0 / jnp.maximum(od, 1e-10)
+        cities = jnp.concatenate([cities, oc], axis=-1)
+        tau_row = jnp.concatenate([tau_row, ovf_tau[cur]], axis=-1)
+        eta_row = jnp.concatenate([eta_row, oe], axis=-1)
+        dist_row = jnp.concatenate([dist_row, od], axis=-1)
+    return cities, tau_row, eta_row, dist_row
+
+
+def _score(w: Array, rand_full: Array, cities: Array, ants: Array,
+           selection: str) -> Array:
+    """Selection scores over the masked candidate weights ``w`` (m, K).
+
+    ``rand_full`` is the (m, n) full-width draw; gathering it at candidate
+    cities makes a candidate's score bitwise the dense selector's score at
+    that city (sampling.iroulette / sampling.gumbel semantics).
+    """
+    if selection == "greedy":
+        return w
+    r = rand_full[ants[:, None], cities]             # (m, K)
+    if selection == "iroulette":
+        return w * r
+    if selection == "gumbel":
+        logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-38)), _NEG_INF)
+        return logw + r
+    raise ValueError(f"selection {selection!r} unsupported on sparse route")
+
+
+def _draw(key: Array, m: int, n: int, selection: str) -> Array:
+    """The full-width (m, n) stochastic tensor for this step — the same
+    draw (same key, shape, dtype) the dense selector makes, so gathered
+    entries match the dense route bit-for-bit."""
+    if selection == "greedy":
+        return jnp.zeros((1, 1), jnp.float32)        # unused
+    if selection == "gumbel":
+        return jax.random.gumbel(key, (m, n), jnp.float32)
+    return jax.random.uniform(key, (m, n), jnp.float32,
+                              minval=1e-6, maxval=1.0)
+
+
+def _fallback_nearest(problem: SparseProblem, cur: Array, visited: Array,
+                      ewt: str, n_actual: Optional[Array]) -> Array:
+    """Nearest unvisited city by lazy distance — the O(m·n) page-fault
+    step, only reached when an ant's whole candidate set is visited."""
+    rows = store.lazy_rows(problem.coords, cur, ewt)             # (m, n)
+    bad = visited
+    if n_actual is not None:
+        idx = jnp.arange(rows.shape[-1], dtype=jnp.int32)
+        bad = bad | (idx[None, :] >= n_actual)
+    rows = jnp.where(bad, jnp.inf, rows)
+    return jnp.argmin(rows, axis=-1).astype(jnp.int32)
+
+
+class _SparseCarry(NamedTuple):
+    cur: Array       # (m,)
+    visited: Array   # (m, n) bool
+
+
+@partial(jax.jit, static_argnames=("m", "selection", "alpha_beta", "ewt",
+                                   "masked", "use_pallas"))
+def _construct_sparse(key: Array, problem: SparseProblem, tau: Array,
+                      ovf_city: Array, ovf_tau: Array, n_actual_op: Array,
+                      m: int, selection: str, alpha_beta: tuple,
+                      ewt: str, masked: bool,
+                      use_pallas: bool) -> TourResult:
+    alpha, beta = alpha_beta
+    n = problem.n
+    kp, kc = jax.random.split(key)
+    n_act = n_actual_op if masked else None
+    start = strategies.place_ants(kp, m, n, n_act)
+    ants = jnp.arange(m)
+    visited0 = jnp.zeros((m, n), jnp.bool_).at[ants, start].set(True)
+
+    def body(st: _SparseCarry, t: Array):
+        k_ = jax.random.fold_in(kc, t)
+        cities, tau_row, eta_row, dist_row = _candidate_page(
+            problem, tau, ovf_city, ovf_tau, st.cur, ewt)
+        rand_full = _draw(k_, m, n, selection)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            pos, have = kops.sparse_select(
+                tau_row, eta_row, cities, st.visited, rand_full,
+                alpha, beta, selection)
+        else:
+            cmask = ~st.visited[ants[:, None], cities]
+            w = strategies.choice_matrix(tau_row, eta_row, alpha, beta) \
+                * cmask
+            have = w.sum(-1) > 0
+            pos = jnp.argmax(
+                _score(w, rand_full, cities, ants, selection),
+                axis=-1).astype(jnp.int32)
+        nxt_c = cities[ants, pos]
+        d_c = dist_row[ants, pos]
+
+        def page_fault(_):
+            nxt_fb = _fallback_nearest(problem, st.cur, st.visited, ewt,
+                                       n_act)
+            return nxt_fb, store.lazy_pair(problem.coords, st.cur, nxt_fb,
+                                           ewt)
+
+        nxt_fb, d_fb = jax.lax.cond(
+            jnp.all(have), lambda _: (nxt_c, d_c), page_fault, None)
+        nxt = jnp.where(have, nxt_c, nxt_fb)
+        dstep = jnp.where(have, d_c, d_fb)
+        if masked:
+            # phantom tail in fixed index order, zero-length edges — the
+            # dense masked-emission invariant (DESIGN.md §8)
+            nxt = jnp.where(t < n_act, nxt, t).astype(jnp.int32)
+            dstep = jnp.where(t < n_act, dstep, 0.0)
+        return _SparseCarry(nxt, st.visited.at[ants, nxt].set(True)), \
+            (nxt, dstep)
+
+    _, (steps, dsteps) = jax.lax.scan(
+        body, _SparseCarry(start, visited0), jnp.arange(1, n))
+    tours = jnp.concatenate([start[None, :], steps], axis=0).T
+    tours = tours.astype(jnp.int32)
+    # (m, n) per-edge array: position i = edge tours[i] -> tours[i+1],
+    # closing edge last — the same array shape and sum axis as the dense
+    # _finish / tsp.tour_length, so lengths reduce in the same order.
+    edges = jnp.concatenate(
+        [dsteps.T, jnp.zeros((m, 1), jnp.float32)], axis=-1)      # (m, n)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if masked:
+        last = jnp.take_along_axis(
+            tours, jnp.broadcast_to(n_act - 1, (m, 1)).astype(jnp.int32),
+            axis=-1)[:, 0]
+        d_close = store.pair_lookup(problem, last, tours[:, 0], ewt)
+        edges = jnp.where(idx[None, :] == n_act - 1, d_close[:, None],
+                          edges)
+        edges = jnp.where(idx[None, :] < n_act, edges, 0.0)
+    else:
+        d_close = store.pair_lookup(problem, tours[:, -1], tours[:, 0], ewt)
+        edges = edges.at[:, -1].set(d_close)
+    return TourResult(tours, tsp.edge_sum(edges))
+
+
+def construct_sparse_tours(key: Array, problem: SparseProblem, tau: Array,
+                           ovf_city: Array, ovf_tau: Array, m: int,
+                           selection: str, alpha: float, beta: float,
+                           ewt: str, use_pallas: bool = False) -> TourResult:
+    """Build m complete tours from candidate pages only.
+
+    tau (n, k) candidate-edge pheromone; ovf_city/ovf_tau (n, O) adopted
+    off-list pages.  ``ewt`` (static) selects the lazy-distance rounding
+    rule.  ``selection``: iroulette | gumbel | greedy (roulette needs a
+    full-row CDF and is rejected upstream by check_kernel_route).
+    """
+    masked = problem.n_actual is not None
+    n_act = problem.n_actual if masked else jnp.asarray(problem.n, jnp.int32)
+    return _construct_sparse(key, problem, tau, ovf_city, ovf_tau, n_act,
+                             m, selection, (float(alpha), float(beta)),
+                             ewt, masked, use_pallas)
+
+
+# ------------------------------------------------------------ Partial-ACO
+
+@partial(jax.jit, static_argnames=("m", "window", "selection", "alpha_beta",
+                                   "ewt", "use_pallas"))
+def _partial_impl(key: Array, problem: SparseProblem, tau: Array,
+                  ovf_city: Array, ovf_tau: Array, best_tour: Array,
+                  best_len: Array, m: int, window: int, selection: str,
+                  alpha_beta: tuple, ewt: str,
+                  use_pallas: bool) -> TourResult:
+    alpha, beta = alpha_beta
+    n = problem.n
+    ants = jnp.arange(m)
+    kp, kc = jax.random.split(key)
+    # window start positions: [1, n - window] so the anchor (position s-1)
+    # and the reconnect city (position s+window, mod n) both exist.
+    s = jax.random.randint(kp, (m,), 1, n - window, dtype=jnp.int32)
+    wpos = s[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    wcities = best_tour[wpos]                                   # (m, w)
+    anchor = best_tour[s - 1]                                   # (m,)
+    reconnect = best_tour[(s + window) % n]                     # (m,)
+
+    visited = jnp.ones((m, n), jnp.bool_)
+    visited = visited.at[ants[:, None], wcities].set(False)
+
+    def body(st: _SparseCarry, t: Array):
+        k_ = jax.random.fold_in(kc, t)
+        cities, tau_row, eta_row, dist_row = _candidate_page(
+            problem, tau, ovf_city, ovf_tau, st.cur, ewt)
+        rand_full = _draw(k_, m, n, selection)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            pos, have = kops.sparse_select(
+                tau_row, eta_row, cities, st.visited, rand_full,
+                alpha, beta, selection)
+        else:
+            cmask = ~st.visited[ants[:, None], cities]
+            w = strategies.choice_matrix(tau_row, eta_row, alpha, beta) \
+                * cmask
+            have = w.sum(-1) > 0
+            pos = jnp.argmax(
+                _score(w, rand_full, cities, ants, selection),
+                axis=-1).astype(jnp.int32)
+        nxt_c = cities[ants, pos]
+        d_c = dist_row[ants, pos]
+
+        def page_fault(_):
+            nxt_fb = _fallback_nearest(problem, st.cur, st.visited, ewt,
+                                       None)
+            return nxt_fb, store.lazy_pair(problem.coords, st.cur, nxt_fb,
+                                           ewt)
+
+        nxt_fb, d_fb = jax.lax.cond(
+            jnp.all(have), lambda _: (nxt_c, d_c), page_fault, None)
+        nxt = jnp.where(have, nxt_c, nxt_fb)
+        dstep = jnp.where(have, d_c, d_fb)
+        return _SparseCarry(nxt, st.visited.at[ants, nxt].set(True)), \
+            (nxt, dstep)
+
+    _, (steps, dsteps) = jax.lax.scan(
+        body, _SparseCarry(anchor, visited),
+        jnp.arange(window, dtype=jnp.int32))
+    new_window = steps.T.astype(jnp.int32)                      # (m, w)
+    new_cost = dsteps.T.sum(-1) + store.pair_lookup(
+        problem, new_window[:, -1], reconnect, ewt)
+
+    # old segment cost: edges (s-1 -> s), ..., (s+w-1 -> s+w) of the best
+    # tour, the w+1 edges the mutation replaces.
+    opos = s[:, None] - 1 + jnp.arange(window + 1,
+                                       dtype=jnp.int32)[None, :]
+    oa = best_tour[opos]
+    ob = best_tour[(opos + 1) % n]
+    old_cost = store.pair_lookup(problem, oa, ob, ewt).sum(-1)
+
+    tours = jnp.broadcast_to(best_tour[None, :], (m, n))
+    tours = tours.at[ants[:, None], wpos].set(new_window)
+    lengths = best_len - old_cost + new_cost
+    return TourResult(tours.astype(jnp.int32), lengths)
+
+
+def partial_tours(key: Array, problem: SparseProblem, tau: Array,
+                  ovf_city: Array, ovf_tau: Array, best_tour: Array,
+                  best_len: Array, m: int, window: int, selection: str,
+                  alpha: float, beta: float, ewt: str,
+                  use_pallas: bool = False) -> TourResult:
+    """Partial-ACO mutation: each ant reconstructs one bounded window of
+    the running best tour via candidate-page selection.
+
+    Returned lengths are delta-updated (best_len - old segment + new
+    segment) in float32; the caller must re-measure the accepted best
+    exactly (store.sparse_tour_length) before committing it — that exact
+    re-measure is what makes the best-length sequence monotone
+    non-worsening (tests/test_sparse.py).  Requires a *valid* best_tour
+    (run_sparse seeds it with the row-wise NN tour), window <= n - 2, and
+    an unpadded problem (masked instances are rejected upstream).
+    """
+    window = max(1, min(window, problem.n - 2))
+    return _partial_impl(key, problem, tau, ovf_city, ovf_tau, best_tour,
+                         best_len, m, window, selection,
+                         (float(alpha), float(beta)), ewt, use_pallas)

@@ -1,0 +1,221 @@
+"""Sparse pheromone update: O(n·k) evaporation, candidate-page deposits,
+bounded overflow-slot adoption for off-list best-tour edges.
+
+Layout recap (DESIGN.md §12): trail lives at ``tau`` (n, k) on candidate
+edges, at ``ovf_tau`` (n, O) on adopted off-list edges, and at the scalar
+``tau_def`` for every other edge.  The update mirrors the dense
+``pheromone.update`` exactly on candidate edges:
+
+- evaporation is the same elementwise ``(1 - rho) *`` scale — O(n·k+n·O+1)
+  instead of O(n²);
+- deposits scatter-add onto candidate positions in two passes (forward
+  edges into row f, reverse edges into row t), then one add — the same
+  accumulation structure as the dense ``d + d.T``, so at k = n-1 (every
+  edge on-list, overflow empty) the resulting tau is bitwise the dense
+  tau (tests/test_sparse.py).  An edge whose target is off its row's
+  candidate list contributes a bitwise-identity zero add instead (found
+  mask), and is streamed to the adoption pass;
+- adoption (single-deposit-tour variants, MMAS/ACS): a ``lax.scan`` over
+  the deposit tour's n edges gives each off-list edge a chance to claim an
+  overflow slot on its endpoint rows — match adds, a free slot adopts at
+  ``tau_def + w`` (the trail an off-list edge holds after this step's
+  evaporation, plus its deposit), a full page evicts the weakest slot only
+  if the newcomer is stronger.  AS deposits m whole tours; scanning m·n
+  edges is not O(n·k), so the AS route drops unadoptable off-list deposits
+  (the MMAS clamp bounds the resulting error; AS is not the at-scale
+  variant).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pheromone as dense_ph
+
+from .store import OVF_EMPTY
+
+Array = jax.Array
+
+
+def _positions(cand: Array, rows: Array, targets: Array
+               ) -> tuple[Array, Array]:
+    """For each (row, target) pair: (found, position of target in
+    cand[row]).  Position is 0 when absent — callers must mask."""
+    eq = cand[rows] == targets[..., None]
+    return eq.any(-1), jnp.argmax(eq, -1).astype(jnp.int32)
+
+
+def deposit_sparse(cand: Array, tours: Array, w: Array,
+                   n_actual: Optional[Array] = None,
+                   ant_chunk: Optional[int] = None) -> tuple[Array, Array]:
+    """Candidate-page deposit for (m, n) tours with (m,) weights.
+
+    Returns (dep (n, k), off (m*n,)) where ``off`` carries the weight of
+    each *forward* edge that is off its row's candidate list (0 for
+    on-list / phantom edges) — the adoption stream.
+
+    Accumulation order matches the dense ``deposit_scatter`` exactly:
+    forward scatters run in the same edge-stream order (one scatter over
+    all m·n edges whenever the (m·n, k) position gather fits a small
+    transient budget, per-ant scan chunks beyond it — within-stream order
+    is preserved either way), reverse scatters likewise, then one
+    elementwise add — the dense ``d + d.T``.
+    """
+    n, k = cand.shape
+    f, t = dense_ph.tour_edges(tours, n_actual)
+    wrep = dense_ph.edge_weights(tours, w, n_actual).reshape(f.shape)
+    m = f.shape[0]
+    if ant_chunk is None:
+        ant_chunk = m if m * f.shape[1] * k <= 2 ** 22 else 1
+    pad = (-m) % ant_chunk
+    if pad:
+        f = jnp.concatenate([f, jnp.zeros((pad, f.shape[1]), f.dtype)])
+        t = jnp.concatenate([t, jnp.zeros((pad, t.shape[1]), t.dtype)])
+        wrep = jnp.concatenate(
+            [wrep, jnp.zeros((pad, wrep.shape[1]), wrep.dtype)])
+
+    def body(carry, ft):
+        d1, d2 = carry
+        fc, tc, wc = ft
+        fr, tr, wr = fc.ravel(), tc.ravel(), wc.ravel()
+        fwd_found, fwd_pos = _positions(cand, fr, tr)
+        rev_found, rev_pos = _positions(cand, tr, fr)
+        d1 = d1.at[fr, fwd_pos].add(jnp.where(fwd_found, wr, 0.0))
+        d2 = d2.at[tr, rev_pos].add(jnp.where(rev_found, wr, 0.0))
+        return (d1, d2), jnp.where(fwd_found, 0.0, wr)
+
+    nc = f.shape[0] // ant_chunk
+    zeros = jnp.zeros((n, k), jnp.float32)
+    (d1, d2), off = jax.lax.scan(
+        body, (zeros, zeros),
+        (f.reshape(nc, ant_chunk, -1), t.reshape(nc, ant_chunk, -1),
+         wrep.reshape(nc, ant_chunk, -1)))
+    return d1 + d2, off.ravel()[: m * f.shape[1]]
+
+
+def adopt_offlist(cand: Array, ovf_city: Array, ovf_tau: Array,
+                  tour: Array, w: Array, tau_def: Array,
+                  n_actual: Optional[Array] = None
+                  ) -> tuple[Array, Array]:
+    """Give each off-list edge of one deposit tour a bounded overflow slot.
+
+    ``tour`` (n,) with scalar weight ``w``; both endpoint rows of every
+    off-list edge try to adopt.  Rules per row page (O slots): an existing
+    slot for the city adds ``w``; else a free slot (OVF_EMPTY) adopts at
+    ``tau_def + w`` — tau_def is the already-evaporated default, i.e. the
+    trail the edge held as an anonymous off-list edge; else the weakest
+    slot is evicted iff the newcomer's value beats it.  One lax.scan over
+    the n edges: O(n·O) work, no data-dependent shapes.
+    """
+    f, t = dense_ph.tour_edges(tour[None, :], n_actual)
+    wrep = dense_ph.edge_weights(tour[None, :],
+                                 jnp.asarray([w], jnp.float32), n_actual)
+    f, t, wrep = f[0], t[0], wrep.reshape(-1)
+
+    def one_dir(oc, ot, row, city, we):
+        page_c, page_t = oc[row], ot[row]
+        onlist = (cand[row] == city).any()
+        want = (we > 0) & ~onlist & (city != row)
+        match = page_c == city
+        free = page_c == OVF_EMPTY
+        newval = tau_def + we
+        j_match = jnp.argmax(match)
+        j_free = jnp.argmax(free)
+        j_min = jnp.argmin(ot[row])
+        j = jnp.where(match.any(), j_match,
+                      jnp.where(free.any(), j_free, j_min))
+        act = want & (match.any() | free.any() | (newval > page_t[j_min]))
+        val = jnp.where(match.any(), page_t[j] + we, newval)
+        oc = oc.at[row, j].set(jnp.where(act, city, page_c[j]))
+        ot = ot.at[row, j].set(jnp.where(act, val, page_t[j]))
+        return oc, ot
+
+    def body(carry, e):
+        oc, ot = carry
+        fe, te, we = e
+        oc, ot = one_dir(oc, ot, fe, te, we)
+        oc, ot = one_dir(oc, ot, te, fe, we)
+        return (oc, ot), None
+
+    (ovf_city, ovf_tau), _ = jax.lax.scan(
+        body, (ovf_city, ovf_tau), (f, t, wrep))
+    return ovf_city, ovf_tau
+
+
+def update_sparse(tau: Array, tau_def: Array, ovf_city: Array,
+                  ovf_tau: Array, cand: Array, tours: Array, w: Array,
+                  rho, adopt: bool,
+                  n_actual: Optional[Array] = None
+                  ) -> tuple[Array, Array, Array, Array]:
+    """Full sparse pheromone update: evaporation + deposit (+ adoption).
+
+    ``adopt`` (static): run the overflow-adoption scan over the deposit
+    tours' edges — callers enable it for single-tour deposit variants
+    (MMAS/ACS) when overflow slots exist.
+    """
+    dep, _ = deposit_sparse(cand, tours, w, n_actual)
+    tau = dense_ph.evaporate(tau, rho) + dep
+    tau_def = dense_ph.evaporate(tau_def, rho)
+    ovf_tau = dense_ph.evaporate(ovf_tau, rho)
+    if adopt and ovf_city.shape[-1] > 0:
+        # adopted deposits also land on overflow pages that already track
+        # the edge; scan every deposit tour (1 for MMAS/ACS).
+        def body(carry, tw):
+            oc, ot = carry
+            tr, we = tw
+            oc, ot = adopt_offlist(cand, oc, ot, tr, we, tau_def, n_actual)
+            return (oc, ot), None
+
+        (ovf_city, ovf_tau), _ = jax.lax.scan(
+            body, (ovf_city, ovf_tau), (tours, w))
+    return tau, tau_def, ovf_city, ovf_tau
+
+
+def local_update_acs_sparse(tau: Array, tau_def: Array, ovf_tau: Array,
+                            cand: Array, tours: Array, xi: float,
+                            tau0: Array,
+                            n_actual: Optional[Array] = None,
+                            ant_chunk: int = 1
+                            ) -> tuple[Array, Array, Array]:
+    """ACS local rule on candidate edges: per-edge crossing counts then the
+    order-independent closed form (1-xi)^c — bitwise the dense
+    ``local_update_acs`` restricted to candidate entries (counts are exact
+    small integers, so forward+reverse accumulation order is irrelevant).
+    Off-list crossings are dropped (their shared tau_def cannot decay
+    per-edge); uncrossed edges see factor 1.0 exactly — unchanged, as in
+    the dense route.  Overflow pages keep their trail (crossing an adopted
+    edge is rare and the MMAS-less ACS run bounds ovf_tau via
+    evaporation).
+    """
+    n, k = cand.shape
+    f, t = dense_ph.tour_edges(tours, n_actual)
+    ew = jnp.ones(f.shape, tau.dtype)
+    if n_actual is not None:
+        idx = jnp.arange(f.shape[-1], dtype=jnp.int32)
+        ew = jnp.where(idx[None, :] < n_actual, ew, 0.0)
+    m = f.shape[0]
+    pad = (-m) % ant_chunk
+    if pad:
+        f = jnp.concatenate([f, jnp.zeros((pad, f.shape[1]), f.dtype)])
+        t = jnp.concatenate([t, jnp.zeros((pad, t.shape[1]), t.dtype)])
+        ew = jnp.concatenate([ew, jnp.zeros((pad, ew.shape[1]), ew.dtype)])
+
+    def body(counts, ft):
+        fc, tc, wc = ft
+        fr, tr, wr = fc.ravel(), tc.ravel(), wc.ravel()
+        fwd_found, fwd_pos = _positions(cand, fr, tr)
+        rev_found, rev_pos = _positions(cand, tr, fr)
+        counts = counts.at[fr, fwd_pos].add(jnp.where(fwd_found, wr, 0.0))
+        counts = counts.at[tr, rev_pos].add(jnp.where(rev_found, wr, 0.0))
+        return counts, None
+
+    nc = f.shape[0] // ant_chunk
+    counts, _ = jax.lax.scan(
+        body, jnp.zeros((n, k), tau.dtype),
+        (f.reshape(nc, ant_chunk, -1), t.reshape(nc, ant_chunk, -1),
+         ew.reshape(nc, ant_chunk, -1)))
+    factor = jnp.power(jnp.asarray(1.0 - xi, tau.dtype), counts)
+    tau = factor * tau + (1.0 - factor) * tau0
+    return tau, tau_def, ovf_tau

@@ -1,0 +1,283 @@
+"""Sparse/paged problem representation: O(n*k) storage, no dense rows.
+
+The dense pipeline keeps three resident (n, n) float32 tensors per colony
+(distance, eta, pheromone) plus a fourth transient one (choice) — a hard
+O(n^2) memory wall that caps instances far below the paper's 2392-city
+ceiling.  This module is the ACO analogue of a paged KV cache (DESIGN.md
+§12): every resident tensor is candidate-list-restricted to (n, k):
+
+- ``SparseProblem``: per-city candidate lists (``cand``, the k nearest
+  neighbours by TSPLIB-rounded distance, deterministic index tie-break)
+  with distance and eta stored **only on candidate edges**, plus the raw
+  (n, 2) coordinates so any off-list distance can be recomputed lazily in
+  O(1) — the "page fault" path;
+- ``SparseColonyState``: pheromone held only on candidate edges
+  (``tau`` (n, k)) plus a scalar **off-list default trail** ``tau_def``
+  (MMAS clamping makes a shared off-list level exact-enough by
+  construction: unvisited off-list edges all decay to tau_min) and a
+  bounded per-city **overflow page** (``ovf_city``/``ovf_tau``, O slots)
+  that adopts off-list edges the best tours actually use.
+
+Bitwise contract: every stored candidate value (distance, eta, tau0) is
+produced by the same arithmetic as the dense route's matrix entry —
+float64 TSPLIB rounding (``tsp.pairwise_distances``) cast to float32,
+``1/max(d, 1e-10)`` eta, the same nearest-neighbour-tour tau0 — so the
+sparse route with k = n-1 reproduces the dense route bit-for-bit
+(tests/test_sparse.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tsp
+
+Array = jax.Array
+
+OVF_EMPTY = -1          # ovf_city sentinel: slot not adopted
+
+
+class SparseProblem(NamedTuple):
+    """Device-resident constants for one candidate-list-restricted instance.
+
+    ``coords`` is the only per-city dense object (n, 2); everything else is
+    (n, k).  ``n_actual`` follows the dense Problem convention (DESIGN.md
+    §8): None for ordinary instances, a traced () int32 scalar for padded
+    instances (phantom cities never appear in any candidate list —
+    tsp.nn_lists masks them to the self sentinel).  The TSPLIB rounding
+    rule (edge_weight_type) is *static* and travels next to the problem as
+    a plain string through the jitted entry points, not inside the pytree.
+    """
+    coords: Array          # (n, 2) float32
+    cand: Array            # (n, k) int32 candidate city ids (self = sentinel)
+    cand_dist: Array       # (n, k) float32, bitwise == dense dist at (i, cand)
+    cand_eta: Array        # (n, k) float32, bitwise == dense eta at (i, cand)
+    n_actual: Optional[Array] = None   # () int32, or None (unpadded)
+
+    @property
+    def n(self) -> int:
+        return int(self.cand.shape[-2])
+
+    @property
+    def k(self) -> int:
+        return int(self.cand.shape[-1])
+
+
+class SparseColonyState(NamedTuple):
+    """Paged pheromone state + the usual best-tracking scalars."""
+    tau: Array             # (n, k) trail on candidate edges
+    tau_def: Array         # () off-list default trail (clamped level)
+    ovf_city: Array        # (n, O) int32 adopted off-list cities (-1 empty)
+    ovf_tau: Array         # (n, O) float32 adopted off-list trail
+    best_tour: Array       # (n,) int32
+    best_len: Array        # () float32
+    iteration: Array       # () int32
+    key: Array             # PRNG key
+
+
+def _pairwise_f32(xy: np.ndarray, rows: np.ndarray, ewt: str) -> np.ndarray:
+    """(len(rows), n) float32 distance rows, bitwise == dense matrix rows."""
+    d = tsp.pairwise_distances(xy[rows], xy, ewt)
+    d[np.arange(len(rows)), rows] = 0.0      # diagonal convention
+    return d.astype(np.float32)
+
+
+def build_candidates(instance: tsp.TSPInstance, k: int,
+                     chunk: int = 256) -> tuple[np.ndarray, np.ndarray]:
+    """(n, k) candidate ids + distances without materialising (n, n).
+
+    Distance rows are produced in ``chunk``-row blocks (transient
+    O(chunk * n), resident O(n * k)); candidates are the k nearest by the
+    float32-cast distance with deterministic index tie-breaking — the same
+    ordering rule as ``tsp.nn_lists`` (stable argsort), so small instances
+    agree with the dense builder.  Rows whose real neighbour count n-1 is
+    below ``k`` fill surplus positions with the row's own index (the
+    always-visited self sentinel; never selectable).
+    """
+    if instance.coords is None:
+        raise ValueError(
+            "sparse representation needs coordinates; EXPLICIT "
+            "distance-matrix instances must run the dense route")
+    xy = np.asarray(instance.coords, np.float64)
+    n = instance.n
+    kk = max(1, min(k, n - 1))
+    cand = np.empty((n, k), np.int32)
+    cdist = np.empty((n, k), np.float32)
+    for lo in range(0, n, chunk):
+        rows = np.arange(lo, min(lo + chunk, n))
+        d = _pairwise_f32(xy, rows, instance.edge_weight_type)
+        d[np.arange(len(rows)), rows] = np.inf      # exclude self
+        order = np.argsort(d, axis=-1, kind="stable")[:, :kk]
+        cand[rows, :kk] = order
+        cdist[rows, :kk] = np.take_along_axis(d, order, axis=-1)
+        if kk < k:                                   # surplus -> self sentinel
+            cand[rows, kk:] = rows[:, None]
+            cdist[rows, kk:] = 1.0
+    return cand, cdist
+
+
+def make_sparse_problem(instance: tsp.TSPInstance, k: int,
+                        n_pad: Optional[int] = None,
+                        chunk: int = 256) -> SparseProblem:
+    """Build the O(n*k) problem pages, optionally padded to ``n_pad``.
+
+    Phantom rows (>= instance.n) are entirely self-sentinel candidates
+    with eta 0 — a phantom city is never selectable and never offers
+    candidates (satellite contract: phantoms never appear in a candidate
+    list).  ``n_actual`` is attached whenever padding is requested, like
+    ``solver.batch.padded_problem`` does for the dense route.
+    """
+    n = instance.n
+    n_pad = n if n_pad is None else n_pad
+    if n_pad < n:
+        raise ValueError(f"n_pad={n_pad} < instance size {n}")
+    cand, cdist = build_candidates(instance, k, chunk)
+    eta = (np.float32(1.0) / np.maximum(cdist, np.float32(1e-10))).astype(
+        np.float32)
+    coords = np.asarray(instance.coords, np.float32)
+    if n_pad > n:
+        pad_idx = np.arange(n, n_pad, dtype=np.int32)
+        cand = np.concatenate(
+            [cand, np.broadcast_to(pad_idx[:, None], (n_pad - n, k)).copy()])
+        cdist = np.concatenate([cdist, np.ones((n_pad - n, k), np.float32)])
+        eta = np.concatenate([eta, np.zeros((n_pad - n, k), np.float32)])
+        coords = np.concatenate([coords, np.zeros((n_pad - n, 2), np.float32)])
+    n_act = jnp.asarray(n, jnp.int32) if n_pad > n else None
+    return SparseProblem(jnp.asarray(coords), jnp.asarray(cand),
+                         jnp.asarray(cdist), jnp.asarray(eta), n_act)
+
+
+# --------------------------------------------------------------- lazy pages
+
+def lazy_rows(coords: Array, cur: Array, ewt: str) -> Array:
+    """(m, n) float32 distances from cities ``cur`` to every city, computed
+    on the fly from coordinates — the page-fault path for fallback steps
+    and off-list lookups.  float32 arithmetic: only consumed where no
+    bitwise contract applies (off-list edges cannot exist at k = n-1)."""
+    diff = coords[cur][:, None, :] - coords[None, :, :]
+    return _round_ewt(diff, ewt)
+
+
+def lazy_pair(coords: Array, a: Array, b: Array, ewt: str) -> Array:
+    """Elementwise float32 distances between city arrays of equal shape."""
+    diff = coords[a] - coords[b]
+    return _round_ewt(diff, ewt)
+
+
+def _round_ewt(diff: Array, ewt: str) -> Array:
+    sq = (diff * diff).sum(-1)
+    if ewt == "EUC_2D":
+        return jnp.rint(jnp.sqrt(sq))
+    if ewt == "CEIL_2D":
+        return jnp.ceil(jnp.sqrt(sq))
+    if ewt == "ATT":
+        rij = jnp.sqrt(sq / 10.0)
+        tij = jnp.rint(rij)
+        return jnp.where(tij < rij, tij + 1.0, tij)
+    if ewt == "RAW":
+        return jnp.sqrt(sq)
+    raise ValueError(f"unsupported edge_weight_type {ewt}")
+
+
+def pair_lookup(problem: SparseProblem, a: Array, b: Array,
+                ewt: str) -> Array:
+    """Distance of arbitrary city pairs: candidate page hit -> stored
+    (dense-bitwise) value; miss -> lazy recompute.  a/b same shape."""
+    rows = problem.cand[a]                       # (..., k)
+    eq = rows == b[..., None]
+    found = eq.any(-1)
+    pos = jnp.argmax(eq, -1)
+    on = jnp.take_along_axis(problem.cand_dist[a], pos[..., None], -1)[..., 0]
+    return jnp.where(found, on, lazy_pair(problem.coords, a, b, ewt))
+
+
+def sparse_tour_length(problem: SparseProblem, tours: Array, ewt: str,
+                       n_actual: Optional[Array] = None) -> Array:
+    """Closed-tour lengths for (m, n) tours from the sparse pages only.
+
+    Mirrors ``tsp.tour_length`` masking semantics; every edge distance is
+    a candidate-page hit or a lazy recompute.
+    """
+    nxt = jnp.roll(tours, -1, axis=-1)
+    if n_actual is not None:
+        idx = jnp.arange(tours.shape[-1], dtype=jnp.int32)
+        nxt = jnp.where(idx == n_actual - 1, tours[..., :1], nxt)
+    d = pair_lookup(problem, tours, nxt, ewt)
+    if n_actual is not None:
+        idx = jnp.arange(tours.shape[-1], dtype=jnp.int32)
+        d = jnp.where(idx < n_actual, d, 0.0)
+    return tsp.edge_sum(d)
+
+
+# ----------------------------------------------------------- init / metrics
+
+def sparse_nearest_neighbour_tour(instance: tsp.TSPInstance,
+                                  start: int = 0) -> tuple[np.ndarray, float]:
+    """Greedy NN tour from coordinate rows (no (n, n) matrix), bitwise the
+    dense ``tsp.nearest_neighbour_tour`` result: each row is the same
+    float64-rounded-then-float32 values the dense matrix holds, and the
+    length is summed over the same float32 edge array."""
+    xy = np.asarray(instance.coords, np.float64)
+    n = instance.n
+    ewt = instance.edge_weight_type
+    visited = np.zeros(n, dtype=bool)
+    tour = np.empty(n, dtype=np.int32)
+    cur = start
+    tour[0] = cur
+    visited[cur] = True
+    for i in range(1, n):
+        row = _pairwise_f32(xy, np.asarray([cur]), ewt)[0]
+        cur = int(np.argmin(np.where(visited, np.inf, row)))
+        tour[i] = cur
+        visited[cur] = True
+    # Same float32 edge array (and the same numpy pairwise .sum()) as the
+    # dense ``dist[tour, roll(tour, -1)].sum()`` — bitwise-equal length.
+    edges = np.empty(n, np.float32)
+    nxt = np.roll(tour, -1)
+    for lo in range(0, n, 256):
+        hi = min(lo + 256, n)
+        h = hi - lo
+        edges[lo:hi] = tsp.pairwise_distances(
+            xy[tour[lo:hi]], xy[nxt[lo:hi]], ewt
+        )[np.arange(h), np.arange(h)].astype(np.float32)
+    return tour, float(edges.sum())
+
+
+def sparse_initial_tau(instance: tsp.TSPInstance, cfg) -> float:
+    """tau0 = m/C_nn (AS), 1/(rho C_nn) (MMAS), 1/(n C_nn) (ACS) — the same
+    formulas as ``aco.initial_tau`` with C_nn from the row-wise NN tour."""
+    _, c_nn = sparse_nearest_neighbour_tour(instance)
+    n = instance.n
+    m = cfg.num_ants(n)
+    if cfg.variant == "mmas":
+        return 1.0 / (cfg.rho * c_nn)
+    if cfg.variant == "acs":
+        return 1.0 / (n * c_nn)
+    return m / c_nn
+
+
+def resident_bytes(problem: SparseProblem,
+                   state: SparseColonyState) -> int:
+    """Total device-resident bytes of the sparse representation."""
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves((problem, state)))
+
+
+def dense_resident_bytes(n: int) -> int:
+    """What the dense route keeps resident for one colony: dist + eta +
+    tau, three (n, n) float32 tensors (the transient (n, n) choice matrix
+    and (m, n) construction tensors excluded from both sides)."""
+    return 3 * n * n * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseBatchMeta:
+    """Static facts a sparse bucket shares (DESIGN.md §12): one rounding
+    rule and one candidate width per compiled program."""
+    ewt: str
+    k: int
+    n_pad: int

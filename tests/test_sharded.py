@@ -214,4 +214,6 @@ def test_solve_serve_unsupported_kernel_route_one_liner():
     assert out.returncode == 2
     err = out.stderr.strip().splitlines()
     assert len(err) == 1, out.stderr
-    assert "per-instance-hyper" in err[0] and "Traceback" not in out.stderr
+    # the one-liner relays the route checker's actionable message
+    assert "Hyper" in err[0] and "use_pallas" in err[0]
+    assert "Traceback" not in out.stderr

@@ -1,0 +1,277 @@
+"""Sparse/paged representation (DESIGN.md §12): bitwise parity with the
+dense route at k = n-1, kernel-vs-oracle equality, Partial-ACO contract,
+overflow adoption, batched engine composition, and route rejections.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aco, tsp
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.ops import UnsupportedKernelRoute
+from repro.solver import batch as batch_mod
+from repro.solver import engine
+from repro.sparse import aco as sa
+from repro.sparse import construct, pheromone, store
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _cfg(**kw):
+    base = dict(iterations=5, m=10, seed=3)
+    base.update(kw)
+    return aco.ACOConfig(**base)
+
+
+def _instances():
+    return [tsp.circle_instance(24), tsp.grid_instance(5)]
+
+
+# --------------------------------------------------- k = n-1 bitwise parity
+@pytest.mark.parametrize("variant", ["as", "mmas", "acs"])
+@pytest.mark.parametrize("selection", ["iroulette", "gumbel"])
+def test_sparse_equals_dense_at_full_k(variant, selection):
+    """With every edge on a candidate page the sparse trajectory IS the
+    dense trajectory: tours, lengths, and pheromone, bit for bit."""
+    for inst in _instances():
+        n = inst.n
+        cfg = _cfg(variant=variant, selection=selection)
+        dense = aco.run(inst, dataclasses.replace(cfg, sparse=False))
+        scfg = dataclasses.replace(cfg, sparse=True, sparse_k=n - 1)
+        prob = store.make_sparse_problem(inst, n - 1)
+        state = sa.run_sparse(inst, scfg, problem=prob)
+        assert np.array_equal(np.asarray(dense.best_tour),
+                              np.asarray(state.best_tour))
+        assert float(dense.best_len) == float(state.best_len)
+        dtau = np.asarray(dense.tau)
+        cand = np.asarray(prob.cand)
+        rows = np.arange(n)[:, None]
+        np.testing.assert_array_equal(dtau[rows, cand],
+                                      np.asarray(state.tau))
+
+
+def test_sparse_candidate_values_bitwise_dense():
+    """Stored page distances/eta are bitwise the dense matrix entries."""
+    inst = tsp.random_instance(40, seed=9)
+    prob = store.make_sparse_problem(inst, 12)
+    d = np.asarray(inst.distances(), np.float32)
+    eta = np.asarray(tsp.heuristic_matrix(jnp.asarray(d)))
+    cand = np.asarray(prob.cand)
+    rows = np.arange(inst.n)[:, None]
+    np.testing.assert_array_equal(d[rows, cand], np.asarray(prob.cand_dist))
+    np.testing.assert_array_equal(eta[rows, cand], np.asarray(prob.cand_eta))
+
+
+# ------------------------------------------------------- kernel vs oracle
+@pytest.mark.parametrize("mode", ["iroulette", "gumbel", "greedy"])
+@pytest.mark.parametrize("alpha,beta", [(1.0, 2.0), (0.9, 3.7)])
+def test_sparse_select_kernel_matches_ref(mode, alpha, beta):
+    m, n, k = 13, 100, 9
+    ks = jax.random.split(jax.random.fold_in(KEY, hash(mode) % 1000), 5)
+    tau = jax.random.uniform(ks[0], (m, k)) + 0.1
+    eta = jax.random.uniform(ks[1], (m, k)) + 0.1
+    cand = jax.random.randint(ks[2], (m, k), 0, n)
+    cand = jnp.where(jax.random.bernoulli(ks[3], 0.1, (m, k)), -1, cand)
+    visited = jax.random.bernoulli(ks[3], 0.4, (m, n))
+    rand = jax.random.uniform(ks[4], (m, n), jnp.float32, 1e-6, 1.0)
+    pos, have = kops.sparse_select(tau, eta, cand, visited, rand,
+                                   alpha, beta, mode)
+    rpos, rhave = ref.sparse_select(tau, eta, cand, visited, rand,
+                                    alpha, beta, mode)
+    np.testing.assert_array_equal(np.asarray(have), np.asarray(rhave))
+    live = np.asarray(have).astype(bool)
+    np.testing.assert_array_equal(np.asarray(pos)[live],
+                                  np.asarray(rpos)[live])
+
+
+def test_sparse_pallas_route_matches_pure():
+    inst = tsp.random_instance(32, seed=4)
+    cfg = _cfg(variant="mmas", sparse=True, sparse_k=8)
+    pure = sa.run_sparse(inst, cfg)
+    pal = sa.run_sparse(inst, dataclasses.replace(cfg, use_pallas=True))
+    assert float(pure.best_len) == float(pal.best_len)
+    assert np.array_equal(np.asarray(pure.best_tour),
+                          np.asarray(pal.best_tour))
+    np.testing.assert_array_equal(np.asarray(pure.tau), np.asarray(pal.tau))
+
+
+# ---------------------------------------------------------- Partial-ACO
+def test_partial_aco_monotone_and_valid():
+    inst = tsp.random_instance(60, seed=11)
+    cfg = _cfg(variant="mmas", sparse=True, sparse_k=10,
+               construction="partial", partial_window=12, m=16,
+               iterations=0)
+    prob = store.make_sparse_problem(inst, 10)
+    state = sa.init_sparse_colony(inst, cfg)
+    assert tsp.is_valid_tour(np.asarray(state.best_tour))
+    lens = [float(state.best_len)]
+    for _ in range(20):
+        state, _ = sa.sparse_colony_step(prob, state, cfg, "RAW")
+        lens.append(float(state.best_len))
+    assert all(b <= a for a, b in zip(lens, lens[1:]))
+    assert tsp.is_valid_tour(np.asarray(state.best_tour))
+    # exact length of the final best (delta updates never accumulate error)
+    exact = float(store.sparse_tour_length(
+        prob, jnp.asarray(state.best_tour)[None, :], "RAW")[0])
+    assert float(state.best_len) == exact
+
+
+# ------------------------------------------------------ overflow adoption
+def test_offlist_adoption_and_eviction():
+    cand = jnp.asarray([[1, 2], [0, 2], [0, 1], [0, 1]], jnp.int32)  # n=4,k=2
+    n = 4
+    ovf_city = jnp.full((n, 2), store.OVF_EMPTY, jnp.int32)
+    ovf_tau = jnp.zeros((n, 2), jnp.float32)
+    # tour 0-1-2-3: edge 0-3 and 3-0... closing edge 3->0 is off-list for
+    # neither endpoint? cand[3] = [0, 1] contains 0, cand[0] = [1, 2]
+    # misses 3 -> city 0 adopts 3.
+    tour = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    w = jnp.asarray(0.5, jnp.float32)
+    oc, ot = pheromone.adopt_offlist(cand, ovf_city, ovf_tau, tour, w,
+                                     jnp.asarray(0.1, jnp.float32), None)
+    oc, ot = np.asarray(oc), np.asarray(ot)
+    assert 3 in oc[0]                       # 0 adopted off-list partner 3
+    slot = list(oc[0]).index(3)
+    assert ot[0, slot] == np.float32(0.1 + 0.5)     # tau_def + w
+    # matching deposit accumulates instead of re-adopting
+    oc2, ot2 = pheromone.adopt_offlist(cand, jnp.asarray(oc),
+                                       jnp.asarray(ot), tour, w,
+                                       jnp.asarray(0.1, jnp.float32), None)
+    oc2, ot2 = np.asarray(oc2), np.asarray(ot2)
+    assert list(oc2[0]).count(3) == 1
+    assert ot2[0, slot] == np.float32(0.1 + 0.5 + 0.5)
+
+
+def test_offlist_adoption_evicts_weakest_only_if_stronger():
+    cand = jnp.asarray([[1], [0], [0], [0]], jnp.int32)     # n=4, k=1
+    ovf_city = jnp.asarray([[2], [-1], [-1], [-1]], jnp.int32)
+    strong = jnp.asarray([[9.0], [0.0], [0.0], [0.0]], jnp.float32)
+    tour = jnp.asarray([0, 3, 1, 2], jnp.int32)   # edge 0-3 off-list for 0
+    w = jnp.asarray(0.5, jnp.float32)
+    oc, _ = pheromone.adopt_offlist(cand, ovf_city, strong, tour, w,
+                                    jnp.asarray(0.1, jnp.float32), None)
+    assert np.asarray(oc)[0, 0] == 2        # newcomer weaker: slot kept
+    weak = jnp.asarray([[0.2], [0.0], [0.0], [0.0]], jnp.float32)
+    oc, ot = pheromone.adopt_offlist(cand, ovf_city, weak, tour, w,
+                                     jnp.asarray(0.1, jnp.float32), None)
+    assert np.asarray(oc)[0, 0] == 3        # newcomer stronger: evicted
+    assert np.asarray(ot)[0, 0] == np.float32(0.1 + 0.5)
+
+
+# ------------------------------------------------- batched engine / service
+def test_batched_sparse_matches_solo_padded():
+    insts = [tsp.circle_instance(20), tsp.random_instance(27, seed=3),
+             tsp.grid_instance(5)]
+    cfg = _cfg(variant="mmas", sparse=True, sparse_k=8, m=12, iterations=4)
+    states, b = engine.solve_instances(insts, cfg, n_pad=32)
+    assert isinstance(b, batch_mod.SparseBatch)
+    res = engine.collect(states, b)
+    for i, inst in enumerate(insts):
+        prob = store.make_sparse_problem(inst, 8, 32)._replace(
+            n_actual=jnp.asarray(inst.n, jnp.int32))
+        s = sa.init_sparse_colony(inst, cfg, cfg.seed + i, 32)
+        for _ in range(4):
+            s, _ = sa.sparse_colony_step(prob, s, cfg,
+                                         inst.edge_weight_type)
+        assert float(s.best_len) == res[i]["best_len"]
+        assert np.array_equal(np.asarray(s.best_tour)[:inst.n],
+                              res[i]["best_tour"])
+        assert bool(jnp.all(s.tau == states.tau[i]))
+        assert tsp.is_valid_tour(res[i]["best_tour"])
+
+
+def test_sparse_batch_rejects_mixed_rounding():
+    a = tsp.circle_instance(8)
+    b = dataclasses.replace(a, edge_weight_type="CEIL_2D") \
+        if dataclasses.is_dataclass(a) else None
+    if b is None:
+        pytest.skip("TSPInstance is not a dataclass")
+    with pytest.raises(ValueError, match="edge weight"):
+        batch_mod.make_sparse_batch([a, b], 4)
+
+
+def test_solver_service_sparse_drain():
+    from repro.solver import SolverService
+    svc = SolverService(_cfg(variant="mmas", sparse=True, sparse_k=8,
+                             iterations=3), max_batch=4)
+    for inst in _instances():
+        svc.submit(inst)
+    results = svc.run()
+    assert len(results) == 2
+    for r in results:
+        assert tsp.is_valid_tour(r.best_tour)
+        assert r.iterations == 3
+
+
+# --------------------------------------------------- storage / padding / O()
+def test_make_sparse_problem_phantoms_inert():
+    inst = tsp.random_instance(10, seed=1)
+    prob = store.make_sparse_problem(inst, 4, n_pad=16)
+    cand = np.asarray(prob.cand)
+    # real rows never list a phantom candidate
+    assert (cand[:10] < 10).all()
+    # phantom rows are pure self-sentinel with eta 0
+    assert (cand[10:] == np.arange(10, 16)[:, None]).all()
+    assert (np.asarray(prob.cand_eta)[10:] == 0).all()
+    assert prob.n_actual is not None and int(prob.n_actual) == 10
+
+
+def test_resident_bytes_scale_with_k_not_n_squared():
+    inst = tsp.random_instance(200, seed=5)
+    cfg = _cfg(variant="mmas", sparse=True, m=8)
+    sizes = {}
+    for k in (8, 16):
+        prob = store.make_sparse_problem(inst, k)
+        st = sa.init_sparse_colony(
+            inst, dataclasses.replace(cfg, sparse_k=k))
+        sizes[k] = store.resident_bytes(prob, st)
+        # nothing resident is (n, n)-shaped
+        for leaf in jax.tree.leaves((prob, st)):
+            assert not (leaf.ndim >= 2 and leaf.shape[-1] == inst.n
+                        and leaf.shape[-2] == inst.n)
+    assert sizes[16] < store.dense_resident_bytes(inst.n) / 4
+    # doubling k roughly doubles the (n, k) pages (fixed overhead aside)
+    assert sizes[16] - sizes[8] == pytest.approx(sizes[8], rel=0.8)
+
+
+def test_edge_sum_matches_pairwise_fold():
+    for ln in (1, 2, 5, 8, 13):
+        x = np.asarray(jax.random.uniform(jax.random.fold_in(KEY, ln),
+                                          (3, ln)), np.float64)
+        got = np.asarray(tsp.edge_sum(jnp.asarray(x, jnp.float32)))
+        np.testing.assert_allclose(got, x.sum(-1).astype(np.float32),
+                                   rtol=1e-5)
+
+
+# ------------------------------------------------------- route rejections
+@pytest.mark.parametrize("kw,match", [
+    (dict(selection="roulette"), "roulette"),
+    (dict(local_search="2opt"), "local_search"),
+    (dict(construction="nn_list"), "construction"),
+])
+def test_sparse_route_rejections(kw, match):
+    cfg = _cfg(variant="mmas", sparse=True, **kw)
+    with pytest.raises(UnsupportedKernelRoute, match=match):
+        sa.check_sparse_route(cfg)
+
+
+def test_sparse_rejects_partial_on_masked_and_streaming_mesh():
+    cfg = _cfg(sparse=True, construction="partial")
+    with pytest.raises(UnsupportedKernelRoute, match="padded"):
+        sa.check_sparse_route(cfg, masked=True)
+    with pytest.raises(UnsupportedKernelRoute, match="streaming"):
+        kops.check_kernel_route(sparse=True, streaming=True)
+    with pytest.raises(UnsupportedKernelRoute, match="mesh"):
+        kops.check_kernel_route(sparse=True, mesh=True)
+    with pytest.raises(UnsupportedKernelRoute, match="Hyper"):
+        kops.check_kernel_route(sparse=True, hyper=True)
+
+
+def test_streaming_service_rejects_sparse():
+    from repro.solver import StreamingSolverService
+    with pytest.raises(UnsupportedKernelRoute, match="streaming"):
+        StreamingSolverService(_cfg(sparse=True))
