@@ -13,7 +13,13 @@ Bitwise contract with the dense route at k = n-1 (tests/test_sparse.py):
 
 - random draws are **full-width**: the same ``fold_in(kc, t)`` key draws
   the same (m, n) uniform/Gumbel tensor the dense selector draws, and the
-  sparse step *gathers* it at candidate cities.  Weighted scores at a city
+  sparse step *gathers* it at candidate cities.  Which tensor depends on
+  the route — the pure route mirrors the dense pure selectors (uniform for
+  iroulette, Gumbel for gumbel), while ``use_pallas=True`` always draws
+  uniforms because the kernel applies the per-mode transform itself, the
+  same operand contract as the dense ``ops.tour_select_step`` (so sparse
+  pallas matches *dense pallas* bitwise at k = n-1, and sparse pure
+  matches dense pure).  Weighted scores at a city
   are then bitwise the dense scores (same tau/eta/mask values, same
   multiply order), so the argmax winner is the same city — candidate
   order only permutes positions, and argmax ties cannot arise among
@@ -98,13 +104,25 @@ def _score(w: Array, rand_full: Array, cities: Array, ants: Array,
     raise ValueError(f"selection {selection!r} unsupported on sparse route")
 
 
-def _draw(key: Array, m: int, n: int, selection: str) -> Array:
-    """The full-width (m, n) stochastic tensor for this step — the same
-    draw (same key, shape, dtype) the dense selector makes, so gathered
-    entries match the dense route bit-for-bit."""
+def _draw(key: Array, m: int, n: int, selection: str,
+          use_pallas: bool) -> Array:
+    """The full-width (m, n) stochastic tensor for this step.
+
+    Pure route: the same draw (same key, shape, dtype) the dense *pure*
+    selector makes (sampling.iroulette / sampling.gumbel), so gathered
+    entries match the dense pure route bit-for-bit.  Pallas route: the
+    kernel consumes **uniforms** and applies the per-mode transform itself
+    (tour_select._transform — the dense kernel contract, see
+    ops.tour_select_step), so gumbel draws uniforms here and the
+    uniform->gumbel map happens in-kernel; feeding it raw Gumbel samples
+    would double-transform (negative samples clip to a constant).  Greedy
+    ignores the values but the kernel's BlockSpecs still need a real
+    (m, n) operand on the pallas route."""
     if selection == "greedy":
+        if use_pallas:
+            return jnp.zeros((m, n), jnp.float32)    # values ignored
         return jnp.zeros((1, 1), jnp.float32)        # unused
-    if selection == "gumbel":
+    if selection == "gumbel" and not use_pallas:
         return jax.random.gumbel(key, (m, n), jnp.float32)
     return jax.random.uniform(key, (m, n), jnp.float32,
                               minval=1e-6, maxval=1.0)
@@ -147,7 +165,7 @@ def _construct_sparse(key: Array, problem: SparseProblem, tau: Array,
         k_ = jax.random.fold_in(kc, t)
         cities, tau_row, eta_row, dist_row = _candidate_page(
             problem, tau, ovf_city, ovf_tau, st.cur, ewt)
-        rand_full = _draw(k_, m, n, selection)
+        rand_full = _draw(k_, m, n, selection, use_pallas)
         if use_pallas:
             from repro.kernels import ops as kops
             pos, have = kops.sparse_select(
@@ -237,9 +255,10 @@ def _partial_impl(key: Array, problem: SparseProblem, tau: Array,
     n = problem.n
     ants = jnp.arange(m)
     kp, kc = jax.random.split(key)
-    # window start positions: [1, n - window] so the anchor (position s-1)
-    # and the reconnect city (position s+window, mod n) both exist.
-    s = jax.random.randint(kp, (m,), 1, n - window, dtype=jnp.int32)
+    # window start positions: [1, n - window] (randint maxval is
+    # exclusive) so the anchor (position s-1) and the reconnect city
+    # (position s+window, mod n) both exist.
+    s = jax.random.randint(kp, (m,), 1, n - window + 1, dtype=jnp.int32)
     wpos = s[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
     wcities = best_tour[wpos]                                   # (m, w)
     anchor = best_tour[s - 1]                                   # (m,)
@@ -252,7 +271,7 @@ def _partial_impl(key: Array, problem: SparseProblem, tau: Array,
         k_ = jax.random.fold_in(kc, t)
         cities, tau_row, eta_row, dist_row = _candidate_page(
             problem, tau, ovf_city, ovf_tau, st.cur, ewt)
-        rand_full = _draw(k_, m, n, selection)
+        rand_full = _draw(k_, m, n, selection, use_pallas)
         if use_pallas:
             from repro.kernels import ops as kops
             pos, have = kops.sparse_select(

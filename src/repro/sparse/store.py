@@ -18,12 +18,18 @@ ceiling.  This module is the ACO analogue of a paged KV cache (DESIGN.md
   bounded per-city **overflow page** (``ovf_city``/``ovf_tau``, O slots)
   that adopts off-list edges the best tours actually use.
 
-Bitwise contract: every stored candidate value (distance, eta, tau0) is
-produced by the same arithmetic as the dense route's matrix entry —
-float64 TSPLIB rounding (``tsp.pairwise_distances``) cast to float32,
-``1/max(d, 1e-10)`` eta, the same nearest-neighbour-tour tau0 — so the
-sparse route with k = n-1 reproduces the dense route bit-for-bit
-(tests/test_sparse.py).
+Bitwise contract: every stored **real** candidate value (distance, eta,
+tau0) is produced by the same arithmetic as the dense route's matrix
+entry — float64 TSPLIB rounding (``tsp.pairwise_distances``) cast to
+float32, ``1/max(d, 1e-10)`` eta, the same nearest-neighbour-tour tau0 —
+so the sparse route with k = n-1 reproduces the dense route bit-for-bit
+(tests/test_sparse.py).  The one exception is surplus **self-sentinel**
+slots (page positions beyond a row's n-1 real neighbours, and every
+phantom-row slot): they hold cand_dist = 1.0 — not the dense diagonal's
+dist[i, i] = 0.0 — purely so the derived eta stays finite.  This never
+surfaces: self entries are always visited-masked during selection and
+``pair_lookup`` is never called with a == b, but callers must not rely on
+sentinel slots mirroring dense matrix entries.
 """
 from __future__ import annotations
 

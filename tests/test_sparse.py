@@ -88,15 +88,53 @@ def test_sparse_select_kernel_matches_ref(mode, alpha, beta):
                                   np.asarray(rpos)[live])
 
 
-def test_sparse_pallas_route_matches_pure():
+@pytest.mark.parametrize("selection", ["iroulette", "greedy"])
+def test_sparse_pallas_route_matches_pure(selection):
+    """Pure and pallas sparse routes share draw semantics for iroulette
+    (both consume uniforms) and greedy (deterministic), so whole runs are
+    bitwise identical.  Gumbel draws differ by design — the kernel route
+    transforms uniforms in-kernel — and is covered against the dense
+    pallas route below."""
     inst = tsp.random_instance(32, seed=4)
-    cfg = _cfg(variant="mmas", sparse=True, sparse_k=8)
+    cfg = _cfg(variant="mmas", sparse=True, sparse_k=8,
+               selection=selection)
     pure = sa.run_sparse(inst, cfg)
     pal = sa.run_sparse(inst, dataclasses.replace(cfg, use_pallas=True))
     assert float(pure.best_len) == float(pal.best_len)
     assert np.array_equal(np.asarray(pure.best_tour),
                           np.asarray(pal.best_tour))
     np.testing.assert_array_equal(np.asarray(pure.tau), np.asarray(pal.tau))
+
+
+@pytest.mark.parametrize("selection", ["gumbel", "iroulette", "greedy"])
+def test_sparse_pallas_construction_matches_dense_pallas(selection):
+    """use_pallas=True must honour the dense kernel operand contract:
+    uniforms in, per-mode transform in-kernel (ops.tour_select_step).  At
+    k = n-1 one sparse pallas construction therefore reproduces the dense
+    method='pallas' construction bitwise — in particular gumbel, whose
+    uniform->gumbel map must happen exactly once (regression: feeding the
+    kernel raw Gumbel samples double-transformed them)."""
+    from repro.core import strategies
+    inst = tsp.random_instance(24, seed=6)
+    n = inst.n
+    m = 10
+    key = jax.random.PRNGKey(12)
+    dist = jnp.asarray(inst.distances(), jnp.float32)
+    eta = tsp.heuristic_matrix(dist)
+    tau = jnp.ones((n, n), jnp.float32)
+    ci = strategies.choice_matrix(tau, eta, 1.0, 2.0)
+    dense = strategies.construct_tours(key, dist, ci, m, method="pallas",
+                                       selection=selection)
+    prob = store.make_sparse_problem(inst, n - 1)
+    sp = construct.construct_sparse_tours(
+        key, prob, jnp.ones((n, n - 1), jnp.float32),
+        jnp.full((n, 0), store.OVF_EMPTY, jnp.int32),
+        jnp.zeros((n, 0), jnp.float32), m, selection, 1.0, 2.0,
+        inst.edge_weight_type, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(dense.tours),
+                                  np.asarray(sp.tours))
+    np.testing.assert_array_equal(np.asarray(dense.lengths),
+                                  np.asarray(sp.lengths))
 
 
 # ---------------------------------------------------------- Partial-ACO
