@@ -12,9 +12,10 @@ import sys
 import time
 
 from . import (construction_profile, fig4_overall, fig5_pheromone,
-               local_search, quality, roofline, sharded_throughput,
-               solver_throughput, sparse_scale, streaming_throughput,
-               table2_tour_construction, table3_pheromone)
+               local_search, obs_overhead, quality, roofline,
+               sharded_throughput, solver_throughput, sparse_scale,
+               streaming_throughput, table2_tour_construction,
+               table3_pheromone)
 
 TABLES = {
     "table2": lambda full: table2_tour_construction.main(
@@ -43,6 +44,9 @@ TABLES = {
     "sparse": lambda full: sparse_scale.main(
         sparse_scale.CASES if full else sparse_scale.DRY_CASES,
         out_path=sparse_scale.DEFAULT_OUT if full else None),
+    "obs": lambda full: obs_overhead.main(
+        obs_overhead.CASE if full else obs_overhead.SMOKE_CASE,
+        out_path=obs_overhead.DEFAULT_OUT if full else None),
 }
 
 

@@ -54,6 +54,12 @@ class ACOConfig:
     sparse_k: int = 32             # candidate-list width of the sparse pages
     sparse_overflow: int = 4       # off-list adoption slots per city
     partial_window: int = 64       # Partial-ACO rebuild window (construction="partial")
+    # In-jit telemetry (repro.obs, DESIGN.md §13): when True, colony_step /
+    # sparse_colony_step additionally return an obs.StepMetrics pytree of
+    # per-iteration convergence scalars, and engine.run_batch carries one
+    # row per instance next to the ColonyState.  Statically gated and
+    # bitwise-neutral: tours/lengths/tau/keys are identical either way.
+    metrics: bool = False
 
     def num_ants(self, n: int) -> int:
         return self.m if self.m is not None else n
@@ -220,10 +226,14 @@ def _apply_local_search(problem: Problem, res: strategies.TourResult,
 
 @partial(jax.jit, static_argnames=("cfg",))
 def colony_step(problem: Problem, state: ColonyState,
-                cfg: ACOConfig) -> tuple[ColonyState, Array]:
+                cfg: ACOConfig) -> tuple:
     """One full ACO iteration: construct m tours, update pheromone, track best.
 
-    Returns (new_state, iteration_best_length).
+    Returns (new_state, iteration_best_length); with ``cfg.metrics`` set,
+    (new_state, iteration_best_length, obs.StepMetrics).  The metrics are
+    read-only reductions over intermediates this step computes anyway — no
+    extra PRNG draws, no reordering — so the state trajectory is bitwise
+    identical either way (tests/test_obs.py).
     """
     n = problem.dist.shape[0]
     m = cfg.num_ants(n)
@@ -262,9 +272,12 @@ def colony_step(problem: Problem, state: ColonyState,
         alpha=alpha, beta=beta, n_actual=n_act,
     )
 
+    pre_ls_lengths = None
     if cfg.local_search != "none":
         # improved tours drive the deposit: LS runs before best-tracking
         # and before the pheromone update (DESIGN.md §7).
+        if cfg.metrics:
+            pre_ls_lengths = res.lengths    # acceptance-rate baseline
         res = _apply_local_search(problem, res, state.iteration, cfg)
 
     it_best_idx = jnp.argmin(res.lengths)
@@ -301,10 +314,12 @@ def colony_step(problem: Problem, state: ColonyState,
 
     # MMAS/ACS normalisations use the real city count of padded instances.
     n_eff = n if n_act is None else n_act
+    clamp = None
     if cfg.variant == "mmas":
         tau_max = q / (rho * best_len)
         tau_min = tau_max / (2.0 * n_eff)
         tau = jnp.clip(tau, tau_min, tau_max)
+        clamp = (tau_min, tau_max)
     elif cfg.variant == "acs":
         # Parallel-ACS local rule: decay edges crossed this iteration.
         f, t = pheromone.tour_edges(res.tours, n_act)
@@ -320,7 +335,13 @@ def colony_step(problem: Problem, state: ColonyState,
 
     new_state = ColonyState(tau, best_tour, best_len,
                             state.iteration + 1, key)
-    return new_state, it_best_len
+    if not cfg.metrics:
+        return new_state, it_best_len
+    from repro.obs import metrics as obs_metrics
+    mets = obs_metrics.step_metrics(
+        res.lengths, it_best_len, best_len, improved, tau, clamp,
+        pre_ls_lengths)
+    return new_state, it_best_len, mets
 
 
 def run(instance: tsp.TSPInstance, cfg: ACOConfig,
@@ -340,7 +361,7 @@ def run(instance: tsp.TSPInstance, cfg: ACOConfig,
         state = init_colony(instance, cfg)
     start = int(state.iteration)
     for i in range(start, cfg.iterations):
-        state, _ = colony_step(problem, state, cfg)
+        state = colony_step(problem, state, cfg)[0]
         if checkpoint_cb and checkpoint_every and (i + 1) % checkpoint_every == 0:
             checkpoint_cb(state)
     return state
@@ -349,7 +370,24 @@ def run(instance: tsp.TSPInstance, cfg: ACOConfig,
 @partial(jax.jit, static_argnames=("cfg", "iterations"))
 def run_scan(problem: Problem, state: ColonyState, cfg: ACOConfig,
              iterations: int) -> tuple[ColonyState, Array]:
-    """Fused multi-iteration driver (benchmarks / island inner loop)."""
+    """Fused multi-iteration driver (benchmarks / island inner loop).
+
+    Returns (state, it_best per iteration); with ``cfg.metrics`` the aux
+    is ``(it_best, StepMetrics)`` with every leaf stacked over iterations
+    — a full convergence curve from one jitted call.  The scan carry
+    threads the stagnation counter the per-step metrics cannot know.
+    """
+    if cfg.metrics:
+        def body_m(carry, _):
+            st, since = carry
+            st2, it_best, m = colony_step(problem, st, cfg)
+            since = jnp.where(m.improved > 0, 0, since + 1)
+            return (st2, since), (it_best, m._replace(stagnation=since))
+
+        (state, _), aux = jax.lax.scan(
+            body_m, (state, jnp.asarray(0, jnp.int32)), None,
+            length=iterations)
+        return state, aux
 
     def body(st, _):
         st, it_best = colony_step(problem, st, cfg)

@@ -18,13 +18,23 @@ O(n*k) paged representation (DESIGN.md §12) in the drain-the-queue mode;
 sparse x streaming / sharding / local-search combinations exit 2 with the
 route checker's one-line reason.
 
+Telemetry (repro.obs, DESIGN.md §13): ``--metrics`` turns on the in-jit
+convergence metrics (bitwise-neutral; each result gains a ``metrics``
+row), ``--metrics-out``/``--trace-out``/``--events-out`` export the
+registry snapshot, the Perfetto-loadable Chrome trace, and the JSON-lines
+slot-lifecycle event log; ``--stats-every`` emits periodic stats_snapshot
+events during a ``--stream`` replay and ``--jax-profile-dir`` wraps the
+run in a jax.profiler capture.
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.solve_serve \
         --num-instances 8 --min-n 12 --max-n 48 --iterations 20
     PYTHONPATH=src python -m repro.launch.solve_serve --sparse \
         --sparse-k 16 --num-instances 6 --iterations 10 --variant mmas
     PYTHONPATH=src python -m repro.launch.solve_serve --stream \
-        --num-instances 8 --arrival-rate 4 --chunk 2 --iterations 10
+        --num-instances 8 --arrival-rate 4 --chunk 2 --iterations 10 \
+        --metrics --metrics-out /tmp/m.json --trace-out /tmp/t.json \
+        --events-out /tmp/e.jsonl
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.solve_serve --shard \
         --num-instances 8 --iterations 10
@@ -37,6 +47,7 @@ import sys
 
 import numpy as np
 
+from repro import obs
 from repro.core import aco, tsp
 from repro.kernels.ops import UnsupportedKernelRoute
 from repro.launch.mesh import make_data_mesh
@@ -58,21 +69,38 @@ def make_workload(num: int, min_n: int, max_n: int, seed: int):
     return out
 
 
+def _round(obj, nd: int = 4):
+    """Recursive float rounding: one rule for every level of the report
+    (the old one-level dict comprehension left nested stats — bucket maps,
+    histogram summaries, metrics rows — unrounded and inconsistent)."""
+    if isinstance(obj, float):
+        return round(obj, nd) if np.isfinite(obj) else obj
+    if isinstance(obj, dict):
+        return {k: _round(v, nd) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_round(v, nd) for v in obj]
+    return obj
+
+
 def _report(results, stats) -> None:
     gaps = [r.gap_pct for r in results if r.gap_pct is not None]
-    print(json.dumps({
-        "results": [
-            {"id": r.request_id, "name": r.name, "n": r.n,
-             "bucket": r.bucket, "best_len": round(r.best_len, 2),
-             "iterations": r.iterations,
-             "gap_pct": None if r.gap_pct is None else round(r.gap_pct, 2),
-             "latency_s": round(r.latency_s, 4)}
-            for r in results
-        ],
-        "mean_gap_pct": round(float(np.mean(gaps)), 2) if gaps else None,
-        "stats": {k: (round(v, 4) if isinstance(v, float) else v)
-                  for k, v in stats.items()},
-    }, indent=2))
+    rows = []
+    for r in results:
+        row = {"id": r.request_id, "name": r.name, "n": r.n,
+               "bucket": r.bucket, "best_len": r.best_len,
+               "iterations": r.iterations, "gap_pct": r.gap_pct,
+               "latency_s": r.latency_s}
+        if r.expired:
+            row["expired"] = True
+        if r.metrics is not None:
+            row["metrics"] = r.metrics
+        rows.append(row)
+    print(json.dumps(_round({
+        "schema": "repro.solve_serve/v1",
+        "results": rows,
+        "mean_gap_pct": float(np.mean(gaps)) if gaps else None,
+        "stats": stats,
+    }), indent=2))
 
 
 def main() -> None:
@@ -123,6 +151,26 @@ def main() -> None:
                     help="--stream: per-slot alpha/beta/rho/q operands so "
                          "one bucket mixes tuning profiles (incompatible "
                          "with --use-pallas)")
+    # telemetry fabric (repro.obs, DESIGN.md §13)
+    ap.add_argument("--metrics", action="store_true",
+                    help="carry in-jit convergence metrics next to every "
+                         "colony (bitwise-neutral): each result gains a "
+                         "metrics row")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the repro.obs/v1 registry snapshot JSON "
+                         "here at exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace (Perfetto-loadable) "
+                         "timeline JSON here at exit")
+    ap.add_argument("--events-out", default=None,
+                    help="mirror the JSON-lines slot-lifecycle event log "
+                         "to this file as records arrive")
+    ap.add_argument("--stats-every", type=float, default=0.0,
+                    help="--stream: emit a stats_snapshot event every this "
+                         "many seconds during the replay")
+    ap.add_argument("--jax-profile-dir", default=None,
+                    help="capture a jax.profiler trace (XPlane/TensorBoard)"
+                         " of the whole run into this directory")
     args = ap.parse_args()
 
     cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
@@ -130,10 +178,14 @@ def main() -> None:
                         local_search=args.local_search, seed=args.seed,
                         use_pallas=args.use_pallas, sparse=args.sparse,
                         sparse_k=args.sparse_k,
-                        sparse_overflow=args.sparse_overflow)
+                        sparse_overflow=args.sparse_overflow,
+                        metrics=args.metrics)
     mesh = make_data_mesh(args.devices) if args.shard else None
+    tel = obs.Telemetry(events_path=args.events_out,
+                        jax_profile_dir=args.jax_profile_dir)
 
     try:
+        tel.profile_start()
         if args.stream:
             if args.checkpoint_dir:
                 ap.error("--checkpoint-dir is not supported with --stream "
@@ -142,31 +194,38 @@ def main() -> None:
                 cfg, max_batch=args.max_batch, min_bucket=args.min_bucket,
                 chunk=args.chunk, patience=args.patience,
                 max_waiting=args.max_waiting,
-                per_instance_hyper=args.per_instance_hyper, mesh=mesh)
+                per_instance_hyper=args.per_instance_hyper, mesh=mesh,
+                telemetry=tel, snapshot_every=args.stats_every)
             trace = make_poisson_trace(args.num_instances, args.arrival_rate,
                                        args.min_n, args.max_n,
                                        seed=args.seed,
                                        iterations=args.iterations)
             results = replay_trace(svc, trace)
             _report(sorted(results, key=lambda r: r.request_id), svc.stats)
-            return
-
-        if args.per_instance_hyper:
-            ap.error("--per-instance-hyper requires --stream")
-        svc = SolverService(cfg, max_batch=args.max_batch,
-                            min_bucket=args.min_bucket,
-                            patience=args.patience,
-                            checkpoint_dir=args.checkpoint_dir, mesh=mesh)
-        for inst in make_workload(args.num_instances, args.min_n,
-                                  args.max_n, args.seed):
-            svc.submit(inst)
-        results = svc.run()
-        _report(results, svc.stats)
+        else:
+            if args.per_instance_hyper:
+                ap.error("--per-instance-hyper requires --stream")
+            svc = SolverService(cfg, max_batch=args.max_batch,
+                                min_bucket=args.min_bucket,
+                                patience=args.patience,
+                                checkpoint_dir=args.checkpoint_dir,
+                                mesh=mesh, telemetry=tel)
+            for inst in make_workload(args.num_instances, args.min_n,
+                                      args.max_n, args.seed):
+                svc.submit(inst)
+            results = svc.run()
+            _report(results, svc.stats)
+        if args.metrics_out:
+            tel.write_metrics(args.metrics_out, extra={"stats": svc.stats})
+        if args.trace_out:
+            tel.write_trace(args.trace_out)
     except UnsupportedKernelRoute as e:
         # one actionable line instead of a traceback (DESIGN.md §10/§12:
         # the route checker's message already says which flag to drop)
         print(f"solve_serve: {e}", file=sys.stderr)
         sys.exit(2)
+    finally:
+        tel.close()
 
 
 if __name__ == "__main__":

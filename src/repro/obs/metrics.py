@@ -1,0 +1,151 @@
+"""In-jit convergence metrics: the statically-gated StepMetrics pytree.
+
+``ACOConfig.metrics=True`` makes every colony step — dense
+(``core.aco.colony_step``) and sparse (``sparse.aco.sparse_colony_step``)
+— return a ``StepMetrics`` alongside the new state.  The engine threads it
+through the batched ``while_loop`` next to the ``ColonyState`` (one row
+per instance, frozen by the same done mask) and through the sharded
+placement route, so live runs expose per-instance convergence state with
+no host round-trip per iteration.
+
+Exactness contract (DESIGN.md §13, tests/test_obs.py): metrics are
+**read-only reductions over intermediates the step already computes** —
+no extra PRNG consumption, no reordering of the state computation — so
+tours / lengths / tau / keys are bitwise identical whether metrics are on
+or off, on every route (solo, batched, streaming, sharded, sparse).
+
+Every field is a scalar (f32/i32) so the pytree vmaps/shards like the
+state does; fields that don't apply to a route hold 0 (``ls_accept`` with
+local search off, ``ovf_*`` on the dense route, ``clamp_*`` outside MMAS).
+``stagnation`` is special: a single step cannot know it (ColonyState
+carries no counter), so steps emit 0 and the drivers that do carry the
+counter (engine.run_batch's ``since``, run_scan's metrics carry) stamp it
+in — see ``engine._run_batch_impl``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# field -> short meaning; doubles as the documented metrics schema the CLI
+# exports and CI validates (DESIGN.md §13).
+FIELDS = {
+    "it_best_len": "iteration-best tour length",
+    "mean_len": "mean constructed-tour length over ants",
+    "best_len": "global best length after this iteration",
+    "improved": "1 iff the global best improved this iteration",
+    "stagnation": "consecutive non-improving iterations (driver-stamped)",
+    "ls_accept": "fraction of tours local search strictly improved",
+    "tau_min": "pheromone minimum",
+    "tau_max": "pheromone maximum",
+    "tau_mean": "pheromone mean",
+    "clamp_lo": "fraction of tau entries at the MMAS lower clamp",
+    "clamp_hi": "fraction of tau entries at the MMAS upper clamp",
+    "ovf_adopted": "sparse overflow slots adopted this iteration",
+    "ovf_evicted": "sparse overflow slots evicted this iteration",
+}
+
+
+class StepMetrics(NamedTuple):
+    it_best_len: Array   # () f32
+    mean_len: Array      # () f32
+    best_len: Array      # () f32
+    improved: Array      # () i32
+    stagnation: Array    # () i32
+    ls_accept: Array     # () f32
+    tau_min: Array       # () f32
+    tau_max: Array       # () f32
+    tau_mean: Array      # () f32
+    clamp_lo: Array      # () f32
+    clamp_hi: Array      # () f32
+    ovf_adopted: Array   # () i32
+    ovf_evicted: Array   # () i32
+
+
+_I32 = ("improved", "stagnation", "ovf_adopted", "ovf_evicted")
+
+
+def zeros() -> StepMetrics:
+    """Scalar zero metrics (fresh slot / metrics-off placeholder)."""
+    return StepMetrics(**{
+        f: jnp.asarray(0, jnp.int32 if f in _I32 else jnp.float32)
+        for f in StepMetrics._fields})
+
+
+def zeros_batch(b: int) -> StepMetrics:
+    """(B,)-stacked zero metrics: the engine's initial carry and the
+    streaming pool's resident metrics buffer."""
+    return StepMetrics(**{
+        f: jnp.zeros((b,), jnp.int32 if f in _I32 else jnp.float32)
+        for f in StepMetrics._fields})
+
+
+def tau_stats(tau: Array, clamp: Optional[tuple[Array, Array]] = None
+              ) -> dict:
+    """min/max/mean of a pheromone tensor plus MMAS clamp-saturation
+    fractions (share of entries sitting exactly at the clip bounds —
+    after ``jnp.clip`` saturated entries equal the bound bitwise).
+
+    Works on the dense (n, n) matrix and the sparse (n, k) pages alike;
+    for padded instances the statistics cover the padded buffer (phantom
+    rows included) — observability, not a masked exactness surface.
+    """
+    out = {
+        "tau_min": jnp.min(tau),
+        "tau_max": jnp.max(tau),
+        "tau_mean": jnp.mean(tau),
+    }
+    if clamp is not None:
+        lo, hi = clamp
+        out["clamp_lo"] = jnp.mean((tau == lo).astype(jnp.float32))
+        out["clamp_hi"] = jnp.mean((tau == hi).astype(jnp.float32))
+    else:
+        out["clamp_lo"] = jnp.float32(0)
+        out["clamp_hi"] = jnp.float32(0)
+    return out
+
+
+def step_metrics(lengths: Array, it_best_len: Array, best_len: Array,
+                 improved: Array, tau: Array,
+                 clamp: Optional[tuple[Array, Array]] = None,
+                 pre_ls_lengths: Optional[Array] = None,
+                 ovf_adopted: Optional[Array] = None,
+                 ovf_evicted: Optional[Array] = None) -> StepMetrics:
+    """Assemble one step's metrics from intermediates the step already
+    holds.  ``pre_ls_lengths``: constructed-tour lengths before local
+    search (None when LS is off — ls_accept reports 0)."""
+    if pre_ls_lengths is None:
+        ls_accept = jnp.float32(0)
+    else:
+        ls_accept = jnp.mean((lengths < pre_ls_lengths)
+                             .astype(jnp.float32))
+    zero_i = jnp.asarray(0, jnp.int32)
+    return StepMetrics(
+        it_best_len=it_best_len.astype(jnp.float32),
+        mean_len=jnp.mean(lengths).astype(jnp.float32),
+        best_len=best_len.astype(jnp.float32),
+        improved=improved.astype(jnp.int32),
+        stagnation=zero_i,                      # driver-stamped (see module doc)
+        ls_accept=ls_accept,
+        ovf_adopted=(zero_i if ovf_adopted is None
+                     else ovf_adopted.astype(jnp.int32)),
+        ovf_evicted=(zero_i if ovf_evicted is None
+                     else ovf_evicted.astype(jnp.int32)),
+        **tau_stats(tau, clamp),
+    )
+
+
+def to_host(mets: StepMetrics, index: Optional[int] = None) -> dict:
+    """One metrics row as a plain JSON-ready dict.  ``index`` selects an
+    instance row from a (B,)-stacked pytree; None reads scalar metrics."""
+    import numpy as np
+    out = {}
+    for f, v in zip(StepMetrics._fields, mets):
+        a = np.asarray(v)
+        x = a if index is None else a[index]
+        out[f] = int(x) if f in _I32 else float(x)
+    return out

@@ -1,0 +1,140 @@
+"""Counter/gauge/histogram registry: the host-side metrics surface.
+
+The solver services used to keep ad-hoc stats in plain Python lists and
+ints (``StreamingSolverService._latencies`` grew one float per completed
+request, forever, over a long-lived service).  This module replaces them
+with a tiny named-instrument registry:
+
+- ``Counter``  — monotone int (requests submitted, slots filled, ...).
+- ``Gauge``    — last-written float (current occupancy, queue depth, ...).
+- ``Histogram``— **bounded**: a fixed-capacity deque of recent samples for
+  percentiles, plus *exact* running ``count``/``total``/``vmax`` fields so
+  means, rates and maxima never drift no matter how many samples the
+  window has dropped (DESIGN.md §13).
+
+Instruments are created on first use (``registry.counter("fills")``), so
+call sites never pre-declare schemas; ``snapshot()`` emits one nested
+JSON-ready dict — the stable export schema the CLI's ``--metrics-out``
+writes and CI validates.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Optional
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Bounded sample window + exact running aggregates.
+
+    ``count``/``total``/``vmax`` are updated on every ``observe`` and are
+    exact over the full stream; percentiles come from the most recent
+    ``window`` samples only.  ``mean()`` is therefore exact while
+    ``percentile(q)`` is a recent-window estimate — the trade the
+    unbounded lists made implicitly in the other direction (exact
+    percentiles, unbounded memory).
+    """
+    __slots__ = ("samples", "count", "total", "vmax")
+
+    def __init__(self, window: int = 4096) -> None:
+        if window < 1:
+            raise ValueError(f"window {window} < 1")
+        self.samples: deque[float] = deque(maxlen=window)
+        self.count = 0
+        self.total = 0.0
+        self.vmax = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.samples.append(v)
+        self.count += 1
+        self.total += v
+        if v > self.vmax:
+            self.vmax = v
+
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def max(self) -> float:
+        return self.vmax if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        if not self.samples:
+            return 0.0
+        xs = sorted(self.samples)
+        # nearest-rank on the window, matching np.percentile's default
+        # closely enough for latency reporting
+        pos = (len(xs) - 1) * q / 100.0
+        lo, hi = int(math.floor(pos)), int(math.ceil(pos))
+        if lo == hi:
+            return xs[lo]
+        frac = pos - lo
+        return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "mean": self.mean(),
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "max": self.max(),
+            "window": self.samples.maxlen,
+        }
+
+
+class Registry:
+    """Create-on-first-use instrument registry with one snapshot schema."""
+
+    def __init__(self) -> None:
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str, window: Optional[int] = None) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(window or 4096)
+        return h
+
+    def snapshot(self) -> dict:
+        """Nested JSON-ready view: the ``registry`` section of the
+        ``repro.obs/v1`` metrics schema (DESIGN.md §13)."""
+        return {
+            "counters": {k: c.value
+                         for k, c in sorted(self._counters.items())},
+            "gauges": {k: g.value for k, g in sorted(self._gauges.items())},
+            "histograms": {k: h.summary()
+                           for k, h in sorted(self._histograms.items())},
+        }

@@ -98,12 +98,23 @@ def init_sparse_states(instances: Sequence[tsp.TSPInstance],
 
 def _run_batch_impl(problem, states, budgets: Array, cfg: aco.ACOConfig,
                     max_iters: int, patience: int, since: Array,
-                    kind: str = "dense", ewt: str = "EUC_2D"):
+                    mets=None, kind: str = "dense", ewt: str = "EUC_2D"):
+    # In-jit telemetry (DESIGN.md §13): with cfg.metrics the loop carries
+    # one obs.StepMetrics row per instance next to the ColonyState, merged
+    # under the *same* freeze mask — a finished instance's metrics stop at
+    # its final iteration, exactly like its state.  ``stagnation`` is
+    # stamped from the loop's own ``since`` counter (the step can't know
+    # it).  With metrics off, ``mets`` is None (a leafless pytree) and the
+    # program is unchanged.
+    metrics_on = cfg.metrics
     if kind == "sparse":
         step = jax.vmap(
-            lambda p, s: sparse_aco.sparse_colony_step(p, s, cfg, ewt)[0])
+            lambda p, s: sparse_aco.sparse_colony_step(p, s, cfg, ewt))
     else:
-        step = jax.vmap(lambda p, s: aco.colony_step(p, s, cfg)[0])
+        step = jax.vmap(lambda p, s: aco.colony_step(p, s, cfg))
+    if metrics_on and mets is None:
+        from repro.obs import metrics as obs_metrics
+        mets = obs_metrics.zeros_batch(budgets.shape[0])
 
     def done_mask(st: aco.ColonyState, since: Array) -> Array:
         d = st.iteration >= budgets
@@ -112,12 +123,13 @@ def _run_batch_impl(problem, states, budgets: Array, cfg: aco.ACOConfig,
         return d
 
     def cond(carry):
-        st, since, it = carry
+        st, since, mets, it = carry
         return (it < max_iters) & ~jnp.all(done_mask(st, since))
 
     def body(carry):
-        st, since, it = carry
-        new = step(problem, st)
+        st, since, mets, it = carry
+        out = step(problem, st)
+        new = out[0]
         active = ~done_mask(st, since)
 
         def sel(nl, ol):
@@ -127,30 +139,36 @@ def _run_batch_impl(problem, states, budgets: Array, cfg: aco.ACOConfig,
         merged = jax.tree.map(sel, new, st)
         improved = new.best_len < st.best_len
         since = jnp.where(active, jnp.where(improved, 0, since + 1), since)
-        return merged, since, it + 1
+        if metrics_on:
+            m_new = out[2]._replace(stagnation=since)
+            mets = jax.tree.map(sel, m_new, mets)
+        return merged, since, mets, it + 1
 
-    states, since, _ = jax.lax.while_loop(
-        cond, body, (states, since, jnp.int32(0)))
+    states, since, mets, _ = jax.lax.while_loop(
+        cond, body, (states, since, mets, jnp.int32(0)))
+    if metrics_on:
+        return states, since, mets
     return states, since
 
 
 _STATIC = ("cfg", "max_iters", "patience", "kind", "ewt")
 _run_batch_jit = jax.jit(_run_batch_impl, static_argnames=_STATIC)
-# Donating variant: the incoming stacked ColonyState (arg 1) and stagnation
-# counters (arg 6) alias the outputs, so a resident pool's chunk step
-# updates its state in place instead of copying the whole (B, n, n) tau
-# stack every chunk.  Donation is an XLA aliasing hint: a no-op on CPU,
-# in-place on TPU — results are identical either way.  Callers of the
-# donated route must not touch the passed-in states/since afterwards.
+# Donating variant: the incoming stacked ColonyState (arg 1), stagnation
+# counters (arg 6) and metrics rows (arg 7; leafless None with metrics
+# off) alias the outputs, so a resident pool's chunk step updates its
+# state in place instead of copying the whole (B, n, n) tau stack every
+# chunk.  Donation is an XLA aliasing hint: a no-op on CPU, in-place on
+# TPU — results are identical either way.  Callers of the donated route
+# must not touch the passed-in states/since/mets afterwards.
 _run_batch_donated = jax.jit(_run_batch_impl, static_argnames=_STATIC,
-                             donate_argnums=(1, 6))
+                             donate_argnums=(1, 6, 7))
 
 
 def run_batch(problem, states, budgets: Array,
               cfg: aco.ACOConfig, max_iters: int, patience: int = 0,
               since: Optional[Array] = None, donate: bool = False,
               mesh=None, instance_spec: str = "data",
-              kind: str = "dense", ewt: str = "EUC_2D"):
+              kind: str = "dense", ewt: str = "EUC_2D", mets=None):
     """Advance B colonies by up to ``max_iters`` more iterations each.
 
     budgets: (B,) int32 *absolute* per-instance iteration targets, compared
@@ -171,9 +189,19 @@ def run_batch(problem, states, budgets: Array,
     and sharded over the devices via shard_map — bitwise identical per
     instance to the single-device call, any device count, uneven B % D
     included.
+    mets: with ``cfg.metrics``, (B,)-stacked obs.StepMetrics rows from a
+    previous chunk (defaults to zeros) — returned updated as a third
+    element ``(states, since, mets)`` so chunked metrics compose exactly;
+    ignored (and the return stays ``(states, since)``) with metrics off.
     """
     if since is None:
         since = jnp.zeros_like(budgets)
+    if cfg.metrics:
+        if mets is None:
+            from repro.obs import metrics as obs_metrics
+            mets = obs_metrics.zeros_batch(budgets.shape[0])
+    else:
+        mets = None
     if mesh is not None:
         if kind == "sparse":
             from repro.kernels import ops as kops
@@ -184,12 +212,12 @@ def run_batch(problem, states, budgets: Array,
         from . import placement
         return placement.run_batch_sharded(problem, states, budgets, cfg,
                                            max_iters, patience, since, mesh,
-                                           instance_spec, donate)
+                                           instance_spec, donate, mets)
     if donate:
         _quiet_cpu_donation_warning()
     fn = _run_batch_donated if donate else _run_batch_jit
     return fn(problem, states, budgets, cfg, max_iters, patience, since,
-              kind=kind, ewt=ewt)
+              mets, kind=kind, ewt=ewt)
 
 
 def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
@@ -221,9 +249,9 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
         sparse_aco.check_sparse_route(cfg, masked=True)
         sstates = init_sparse_states(instances, cfg, sds, sb.n_pad)
         budgets = jnp.asarray(its, jnp.int32)
-        sstates, _ = run_batch(sb.problem, sstates, budgets, cfg,
-                               int(max(its)), patience, donate=True,
-                               mesh=mesh, kind="sparse", ewt=sb.ewt)
+        sstates = run_batch(sb.problem, sstates, budgets, cfg,
+                            int(max(its)), patience, donate=True,
+                            mesh=mesh, kind="sparse", ewt=sb.ewt)[0]
         return sstates, sb
     b = batch_mod.make_batch(instances, n_pad,
                              nn_k if nn_k is not None else cfg.nn_k,
@@ -231,8 +259,8 @@ def solve_instances(instances: Sequence[tsp.TSPInstance], cfg: aco.ACOConfig,
     states = init_states(instances, cfg, sds, b.n_pad, hypers)
     budgets = jnp.asarray(its, jnp.int32)
     # freshly-built states are never reused: safe to donate their buffers
-    states, _ = run_batch(b.problem, states, budgets, cfg, int(max(its)),
-                          patience, donate=True, mesh=mesh)
+    states = run_batch(b.problem, states, budgets, cfg, int(max(its)),
+                       patience, donate=True, mesh=mesh)[0]
     return states, b
 
 

@@ -54,17 +54,19 @@ def data_mesh(devices: Optional[int] = None, axis: str = "data") -> Mesh:
 
 
 def pad_to_devices(problem: aco.Problem, states: aco.ColonyState,
-                   budgets: Array, since: Array, multiple: int):
+                   budgets: Array, since: Array, multiple: int,
+                   mets=None):
     """Pad the instance axis to a multiple of ``multiple`` with phantom
     slots: row 0's problem/state replicated with budget 0, which the
     engine's done mask freezes before the first step (their lanes are
     computed then discarded by the where-merge, so they only need finite
-    numerics — a real instance's row is finite).  Returns the padded
-    pytrees and the original B."""
+    numerics — a real instance's row is finite).  ``mets`` (metrics rows,
+    DESIGN.md §13) pads the same way and is sliced back with the rest.
+    Returns the padded pytrees and the original B."""
     b = budgets.shape[0]
     pad = (-b) % multiple
     if pad == 0:
-        return problem, states, budgets, since, b
+        return problem, states, budgets, since, mets, b
 
     def rep(x):
         return jnp.concatenate(
@@ -74,7 +76,9 @@ def pad_to_devices(problem: aco.Problem, states: aco.ColonyState,
     states = jax.tree.map(rep, states)
     budgets = jnp.concatenate([budgets, jnp.zeros((pad,), budgets.dtype)])
     since = jnp.concatenate([since, jnp.zeros((pad,), since.dtype)])
-    return problem, states, budgets, since, b
+    if mets is not None:
+        mets = jax.tree.map(rep, mets)
+    return problem, states, budgets, since, mets, b
 
 
 # One compiled program per (mesh, axis, cfg, max_iters, patience, donate):
@@ -88,22 +92,24 @@ def _sharded_fn(mesh: Mesh, axis: str, cfg: aco.ACOConfig, max_iters: int,
     fn = _CACHE.get(key)
     if fn is None:
         spec = P(axis)
+        n_out = 3 if cfg.metrics else 2
 
-        def local(problem, states, budgets, since):
+        def local(problem, states, budgets, since, mets):
             # Per-shard body == the single-device program on the local
             # slice; its while_loop conds on *local* done masks only, so
             # shards finish independently (no collectives => divergent
-            # trip counts across devices are fine).
+            # trip counts across devices are fine).  The metrics rows
+            # (leafless None with metrics off) shard with the instances.
             return engine._run_batch_impl(problem, states, budgets, cfg,
-                                          max_iters, patience, since)
+                                          max_iters, patience, since, mets)
 
         # check_rep=False: jax 0.4.37 has no replication rule for while_loop
         # inside shard_map; safe here — the body has no collectives and
         # every output is sharded, nothing is claimed replicated.
         sharded = shard_map(local, mesh=mesh,
-                            in_specs=(spec, spec, spec, spec),
-                            out_specs=(spec, spec), check_rep=False)
-        fn = jax.jit(sharded, donate_argnums=(1, 3) if donate else ())
+                            in_specs=(spec, spec, spec, spec, spec),
+                            out_specs=(spec,) * n_out, check_rep=False)
+        fn = jax.jit(sharded, donate_argnums=(1, 3, 4) if donate else ())
         _CACHE[key] = fn
     return fn
 
@@ -111,24 +117,25 @@ def _sharded_fn(mesh: Mesh, axis: str, cfg: aco.ACOConfig, max_iters: int,
 def run_batch_sharded(problem: aco.Problem, states: aco.ColonyState,
                       budgets: Array, cfg: aco.ACOConfig, max_iters: int,
                       patience: int, since: Array, mesh: Mesh,
-                      instance_spec: str = "data", donate: bool = False
-                      ) -> tuple[aco.ColonyState, Array]:
+                      instance_spec: str = "data", donate: bool = False,
+                      mets=None):
     """Mesh route of ``engine.run_batch``: pad B to a device multiple,
     shard the instance axis over ``mesh[instance_spec]``, run, slice back.
 
-    Donation covers the (possibly padded) stacked state and stagnation
-    counters, same contract as the single-device donated route."""
+    Donation covers the (possibly padded) stacked state, stagnation
+    counters and metrics rows, same contract as the single-device donated
+    route.  Returns ``(states, since)``, plus the updated metrics rows
+    when ``cfg.metrics`` is set."""
     if instance_spec not in mesh.shape:
         raise ValueError(f"mesh has no axis {instance_spec!r}; "
                          f"axes: {tuple(mesh.shape)}")
     d = mesh.shape[instance_spec]
-    problem, states, budgets, since, b = pad_to_devices(
-        problem, states, budgets, since, d)
+    problem, states, budgets, since, mets, b = pad_to_devices(
+        problem, states, budgets, since, d, mets)
     if donate:
         engine._quiet_cpu_donation_warning()
     fn = _sharded_fn(mesh, instance_spec, cfg, max_iters, patience, donate)
-    states, since = fn(problem, states, budgets, since)
-    if states.best_len.shape[0] != b:        # slice phantom slots back off
-        states = jax.tree.map(lambda x: x[:b], states)
-        since = since[:b]
-    return states, since
+    out = fn(problem, states, budgets, since, mets)
+    if out[0].best_len.shape[0] != b:        # slice phantom slots back off
+        out = jax.tree.map(lambda x: x[:b], out)
+    return out

@@ -25,8 +25,10 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.core import aco, pheromone, tsp
+from repro.obs import metrics as obs_metrics
 from repro.runtime.supervisor import Supervisor, SupervisorConfig
 
 from . import batch as batch_mod
@@ -58,6 +60,10 @@ class SolveResult:
     # request's deadline expired before completion — the result then holds
     # the best tour found so far (or an empty tour if it never ran).
     expired: bool = False
+    # In-jit convergence metrics row (repro.obs, DESIGN.md §13) read at
+    # harvest — final stagnation, tau saturation, LS acceptance, ... —
+    # None unless the solve ran with ``ACOConfig.metrics=True``.
+    metrics: Optional[dict] = None
 
 
 class SolverService:
@@ -67,7 +73,8 @@ class SolverService:
                  max_batch: int = 8, min_bucket: int = 16,
                  patience: int = 0,
                  checkpoint_dir: Optional[str] = None,
-                 ckpt_chunk: int = 25, mesh=None):
+                 ckpt_chunk: int = 25, mesh=None,
+                 telemetry: Optional[obs.Telemetry] = None):
         if cfg is None:
             cfg = aco.ACOConfig()
         if cfg.deposit not in pheromone.STRATEGIES:
@@ -92,6 +99,12 @@ class SolverService:
         # axis is sharded over the mesh devices by the placement layer —
         # results stay bitwise what the single-device scheduler returns.
         self.mesh = mesh
+        # Telemetry bundle (repro.obs, DESIGN.md §13): service phases
+        # (bucket / dispatch / collect) land as spans on one timeline, the
+        # job lifecycle as JSON-lines events, and — with ``cfg.metrics`` —
+        # each result carries its in-jit convergence row.  The default
+        # private bundle costs microseconds; pass ``telemetry=`` to export.
+        self.tel = telemetry if telemetry is not None else obs.Telemetry()
         self._queue: list[SolveRequest] = []
         self._next_id = 0
         self._jobs_run = 0
@@ -109,6 +122,10 @@ class SolverService:
             else self.cfg.iterations,
             seed=seed if seed is not None else self.cfg.seed + rid,
             submitted_at=time.perf_counter()))
+        self.tel.registry.counter("submitted").inc()
+        self.tel.events.emit("submit", request_id=rid, n=instance.n,
+                             bucket=batch_mod.bucket_size(instance.n,
+                                                          self.min_bucket))
         return rid
 
     @property
@@ -123,10 +140,11 @@ class SolverService:
         if not queue:
             return []
         t0 = time.perf_counter()
-        by_bucket: dict[int, list[SolveRequest]] = {}
-        for req in queue:
-            b = batch_mod.bucket_size(req.instance.n, self.min_bucket)
-            by_bucket.setdefault(b, []).append(req)
+        with self.tel.tracer.span("bucket", requests=len(queue)):
+            by_bucket: dict[int, list[SolveRequest]] = {}
+            for req in queue:
+                b = batch_mod.bucket_size(req.instance.n, self.min_bucket)
+                by_bucket.setdefault(b, []).append(req)
 
         results: list[SolveResult] = []
         batch_count = 0
@@ -160,55 +178,81 @@ class SolverService:
         job_id = self._jobs_run
         self._jobs_run += 1
 
-        if self.cfg.sparse:
-            b = batch_mod.make_sparse_batch(instances, self.cfg.sparse_k,
-                                            bucket)
-            init = lambda: engine.init_sparse_states(instances, self.cfg,
-                                                     seeds, bucket)
-            kind, ewt = "sparse", b.ewt
-        else:
-            b = batch_mod.make_batch(instances, bucket, self.cfg.nn_k)
-            init = lambda: engine.init_states(instances, self.cfg, seeds,
-                                              bucket)
-            kind, ewt = "dense", "EUC_2D"
-        budgets = jnp.asarray(budgets_list, jnp.int32)
+        thread = f"b{bucket}"
+        with self.tel.tracer.span("prep", thread=thread, n=len(reqs)):
+            if self.cfg.sparse:
+                b = batch_mod.make_sparse_batch(instances,
+                                                self.cfg.sparse_k, bucket)
+                init = lambda: engine.init_sparse_states(instances,
+                                                         self.cfg, seeds,
+                                                         bucket)
+                kind, ewt = "sparse", b.ewt
+            else:
+                b = batch_mod.make_batch(instances, bucket, self.cfg.nn_k)
+                init = lambda: engine.init_states(instances, self.cfg,
+                                                  seeds, bucket)
+                kind, ewt = "dense", "EUC_2D"
+            budgets = jnp.asarray(budgets_list, jnp.int32)
+        metrics_on = self.cfg.metrics
 
         t0 = time.perf_counter()
-        if self.checkpoint_dir:
-            # checkpointed state = (ColonyState, stagnation counters): the
-            # counters must survive chunk boundaries for patience runs to
-            # compose exactly with an uninterrupted one.
-            chunk = self.ckpt_chunk
-            mgr = CheckpointManager(
-                os.path.join(self.checkpoint_dir,
-                             f"job{job_id:04d}_b{bucket}"),
-                async_write=False)
-            sup = Supervisor(
-                SupervisorConfig(total_steps=math.ceil(max_it / chunk),
-                                 ckpt_every=1),
-                mgr,
-                lambda: (init(), jnp.zeros_like(budgets)),
-                lambda st, i: engine.run_batch(
-                    b.problem, st[0], budgets, self.cfg, chunk,
-                    self.patience, st[1], mesh=self.mesh, kind=kind,
-                    ewt=ewt))
-            states, _ = sup.run()
-        else:
-            states, _ = engine.run_batch(b.problem, init(), budgets,
-                                         self.cfg, max_it, self.patience,
-                                         mesh=self.mesh, kind=kind, ewt=ewt)
-        states.best_len.block_until_ready()
+        with self.tel.tracer.span("dispatch", thread=thread, job=job_id,
+                                  bucket=bucket, batch=len(reqs),
+                                  max_iters=max_it):
+            if self.checkpoint_dir:
+                # checkpointed state = (ColonyState, stagnation counters,
+                # [metrics rows]): everything the chunked loop carries must
+                # survive chunk boundaries for patience runs — and final
+                # metrics — to compose exactly with an uninterrupted one.
+                chunk = self.ckpt_chunk
+                mgr = CheckpointManager(
+                    os.path.join(self.checkpoint_dir,
+                                 f"job{job_id:04d}_b{bucket}"),
+                    async_write=False)
+                if metrics_on:
+                    init_st = lambda: (init(), jnp.zeros_like(budgets),
+                                       obs_metrics.zeros_batch(
+                                           budgets.shape[0]))
+                else:
+                    init_st = lambda: (init(), jnp.zeros_like(budgets))
+                sup = Supervisor(
+                    SupervisorConfig(total_steps=math.ceil(max_it / chunk),
+                                     ckpt_every=1),
+                    mgr,
+                    init_st,
+                    lambda st, i: engine.run_batch(
+                        b.problem, st[0], budgets, self.cfg, chunk,
+                        self.patience, st[1], mesh=self.mesh, kind=kind,
+                        ewt=ewt,
+                        mets=st[2] if metrics_on else None))
+                out_st = sup.run()
+            else:
+                out_st = engine.run_batch(b.problem, init(), budgets,
+                                          self.cfg, max_it, self.patience,
+                                          mesh=self.mesh, kind=kind,
+                                          ewt=ewt)
+            states = out_st[0]
+            mets = out_st[2] if metrics_on else None
+            states.best_len.block_until_ready()
         solve_s = time.perf_counter() - t0
 
-        now = time.perf_counter()
-        out = []
-        for req, row in zip(reqs, engine.collect(states, b)):
-            opt = row["known_optimum"]
-            out.append(SolveResult(
-                request_id=req.request_id, name=row["name"], n=row["n"],
-                bucket=bucket, best_len=row["best_len"],
-                best_tour=row["best_tour"], iterations=row["iterations"],
-                gap_pct=(100.0 * (row["best_len"] / opt - 1.0)
-                         if opt else None),
-                latency_s=now - req.submitted_at, solve_s=solve_s))
+        with self.tel.tracer.span("collect", thread=thread, job=job_id):
+            now = time.perf_counter()
+            out = []
+            for k, (req, row) in enumerate(
+                    zip(reqs, engine.collect(states, b))):
+                opt = row["known_optimum"]
+                out.append(SolveResult(
+                    request_id=req.request_id, name=row["name"],
+                    n=row["n"], bucket=bucket, best_len=row["best_len"],
+                    best_tour=row["best_tour"],
+                    iterations=row["iterations"],
+                    gap_pct=(100.0 * (row["best_len"] / opt - 1.0)
+                             if opt else None),
+                    latency_s=now - req.submitted_at, solve_s=solve_s,
+                    metrics=(obs_metrics.to_host(mets, k)
+                             if mets is not None else None)))
+            self.tel.registry.counter("completed").inc(len(out))
+            self.tel.events.emit("job", job_id=job_id, bucket=bucket,
+                                 batch=len(out), solve_s=solve_s)
         return out

@@ -30,8 +30,18 @@ give this:
 Admission control: waiting requests are ordered by (priority desc,
 deadline asc, arrival); ``max_waiting`` bounds the queue (backpressure —
 ``submit`` raises AdmissionError so callers can shed load upstream).
-Live stats track slot occupancy, harvest latency percentiles and
-instances/sec.  DESIGN.md §9 records the slot lifecycle and invariants.
+DESIGN.md §9 records the slot lifecycle and invariants.
+
+Telemetry (repro.obs, DESIGN.md §13): the service records everything into
+a ``Telemetry`` bundle — counters/gauges/**bounded** histograms behind
+``stats`` (occupancy and latency samples no longer grow without bound;
+exact count/total fields keep the means and rates exact), the full slot
+lifecycle (submit → admit → chunk-step → harvest/evict) as JSON-lines
+events, chunk dispatches and slot residencies as Chrome-trace spans on
+per-device/per-bucket tracks, and — with ``cfg.metrics`` — the in-jit
+StepMetrics rows carried next to the resident ColonyState, surfaced per
+result and in periodic snapshots.  Pass a ``telemetry=`` instance to
+export; the default private bundle costs microseconds per event.
 """
 from __future__ import annotations
 
@@ -43,7 +53,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import aco, pheromone, tsp
+from repro.obs import metrics as obs_metrics
 
 from . import batch as batch_mod
 from . import engine
@@ -96,13 +108,21 @@ class StreamingPool:
 
     def __init__(self, bucket: int, slots: int, cfg: aco.ACOConfig,
                  patience: int = 0, nn_k: Optional[int] = None,
-                 per_instance_hyper: bool = False, device=None):
+                 per_instance_hyper: bool = False, device=None,
+                 telemetry: Optional[obs.Telemetry] = None,
+                 dev_label: str = "dev0"):
         self.bucket = bucket
         self.slots = slots
         self.cfg = cfg
         self.patience = patience
         self.nn_k = cfg.nn_k if nn_k is None else nn_k
         self.per_instance_hyper = per_instance_hyper
+        # Telemetry sink (DESIGN.md §13): standalone pools get a private
+        # in-memory bundle; the service shares one across its pools so
+        # traces/events land on one timeline.  ``dev_label`` names this
+        # pool's Chrome-trace process track.
+        self.tel = telemetry if telemetry is not None else obs.Telemetry()
+        self.dev_label = dev_label
         # Per-device placement (DESIGN.md §11): committing the resident
         # pytrees to one device pins every chunk step there — the
         # topology-aware service runs one pool per mesh device and the
@@ -122,12 +142,17 @@ class StreamingPool:
         self.states: aco.ColonyState = jax.tree.map(stack, dstate)
         self.budgets = jnp.zeros((slots,), jnp.int32)
         self.since = jnp.zeros((slots,), jnp.int32)
+        # In-jit metrics rows ride next to the resident state through the
+        # same donate/freeze/refill machinery (None with metrics off).
+        self.mets = obs_metrics.zeros_batch(slots) if cfg.metrics else None
         if device is not None:
             put = lambda t: jax.device_put(t, device)
             self.problem = put(self.problem)
             self.states = put(self.states)
             self.budgets = put(self.budgets)
             self.since = put(self.since)
+            if self.mets is not None:
+                self.mets = put(self.mets)
         self.requests: list[Optional[StreamRequest]] = [None] * slots
         self.filled_at: list[float] = [0.0] * slots
         self.fills = 0
@@ -170,21 +195,40 @@ class StreamingPool:
                                    self.states, news)
         self.budgets = self.budgets.at[ix].set(jnp.asarray(buds, jnp.int32))
         self.since = self.since.at[ix].set(0)
-        for _, req in assignments:        # resident copies own the data now
+        if self.mets is not None:          # fresh slot, fresh metrics row
+            self.mets = jax.tree.map(lambda M: M.at[ix].set(0), self.mets)
+        for i, req in assignments:        # resident copies own the data now
             req.prob = req.state = None
+            self.tel.events.emit(
+                "admit", request_id=req.request_id, slot=i,
+                bucket=self.bucket, device=self.dev_label,
+                n=req.instance.n, iterations=req.iterations,
+                wait_s=now - req.submitted_at)
 
     # ------------------------------------------------------------ stepping
     def step_chunk(self, chunk: int) -> None:
         """Advance every active slot by up to ``chunk`` iterations.
 
-        The resident stacked ColonyState and stagnation counters are
-        *donated* to the jitted chunk step: the old buffers alias the new
-        ones (in-place on TPU, copy-free), which is safe because the only
-        references — ``self.states``/``self.since`` — are immediately
-        rebound to the outputs (DESIGN.md §10)."""
-        self.states, self.since = engine.run_batch(
-            self.problem, self.states, self.budgets, self.cfg, chunk,
-            self.patience, self.since, donate=True)
+        The resident stacked ColonyState, stagnation counters and metrics
+        rows are *donated* to the jitted chunk step: the old buffers alias
+        the new ones (in-place on TPU, copy-free), which is safe because
+        the only references — ``self.states``/``self.since``/``self.mets``
+        — are immediately rebound to the outputs (DESIGN.md §10).
+
+        The dispatch is recorded as a span on this pool's device/bucket
+        track (async: the span covers enqueue, not device wall time) and,
+        when a jax.profiler capture is live, as a named profiler step."""
+        with self.tel.tracer.span("chunk_dispatch", process=self.dev_label,
+                                  thread=f"b{self.bucket}",
+                                  occupied=self.occupied, chunk=chunk), \
+                self.tel.step_annotation("chunk_step", step_num=self.chunks):
+            out = engine.run_batch(
+                self.problem, self.states, self.budgets, self.cfg, chunk,
+                self.patience, self.since, donate=True, mets=self.mets)
+        if self.cfg.metrics:
+            self.states, self.since, self.mets = out
+        else:
+            self.states, self.since = out
         self.chunks += 1
 
     def harvest(self) -> list[SolveResult]:
@@ -225,6 +269,8 @@ class StreamingPool:
             inst = req.instance
             opt = inst.known_optimum
             best_len = float(lens[i])
+            mrow = (obs_metrics.to_host(self.mets, i)
+                    if self.mets is not None else None)
             out.append(SolveResult(
                 request_id=req.request_id, name=inst.name, n=inst.n,
                 bucket=self.bucket, best_len=best_len,
@@ -232,11 +278,39 @@ class StreamingPool:
                 iterations=int(it[i]),
                 gap_pct=(100.0 * (best_len / opt - 1.0) if opt else None),
                 latency_s=now - req.submitted_at,
-                solve_s=now - self.filled_at[i], expired=expired))
+                solve_s=now - self.filled_at[i], expired=expired,
+                metrics=mrow))
             self.requests[i] = None
             freed.append(i)
+            # slot-lifecycle record + a residency span on this slot's
+            # Chrome-trace lane (fill -> free, stamped retroactively)
+            kind = "evict" if expired else "harvest"
+            ev = dict(request_id=req.request_id, slot=i,
+                      bucket=self.bucket, device=self.dev_label,
+                      iterations=int(it[i]), best_len=best_len,
+                      latency_s=now - req.submitted_at)
+            if mrow is not None:
+                ev["metrics"] = mrow
+            self.tel.events.emit(kind, **ev)
+            self.tel.tracer.complete(
+                f"req{req.request_id}" + ("!" if expired else ""),
+                self.tel.tracer.to_us(self.filled_at[i]),
+                (now - self.filled_at[i]) * 1e6,
+                process=self.dev_label, thread=f"b{self.bucket}/s{i}",
+                request_id=req.request_id, n=inst.n,
+                iterations=int(it[i]), expired=expired)
         self.budgets = self.budgets.at[jnp.asarray(freed)].set(0)
         return out
+
+    def latest_metrics(self) -> dict[int, dict]:
+        """Host view of the occupied slots' in-jit metrics rows (one
+        device read-back), keyed by request id — the live convergence
+        snapshot the service's periodic stats emit.  Empty with
+        ``cfg.metrics`` off."""
+        if self.mets is None:
+            return {}
+        return {r.request_id: obs_metrics.to_host(self.mets, i)
+                for i, r in enumerate(self.requests) if r is not None}
 
 
 class StreamingSolverService:
@@ -263,7 +337,9 @@ class StreamingSolverService:
     def __init__(self, cfg: Optional[aco.ACOConfig] = None,
                  max_batch: int = 8, min_bucket: int = 16, chunk: int = 5,
                  patience: int = 0, max_waiting: Optional[int] = None,
-                 per_instance_hyper: bool = False, mesh=None):
+                 per_instance_hyper: bool = False, mesh=None,
+                 telemetry: Optional[obs.Telemetry] = None,
+                 snapshot_every: float = 0.0):
         if cfg is None:
             cfg = aco.ACOConfig()
         if cfg.use_pallas and per_instance_hyper:
@@ -312,16 +388,25 @@ class StreamingSolverService:
         self._pools: dict[int, list[StreamingPool]] = {}
         self._waiting: list[StreamRequest] = []
         self._next_id = 0
-        self._submitted = 0
-        self._rejected = 0
-        self._completed = 0
-        self._expired_running = 0
-        self._expired_waiting = 0
-        self._latencies: list[float] = []
-        self._occ_samples: list[float] = []
+        # Telemetry bundle (DESIGN.md §13): every ad-hoc stat lives in the
+        # registry now — counters for lifecycle totals, **bounded**
+        # histograms (exact count/total, windowed percentiles) for the
+        # latency and occupancy samples that previously grew one float per
+        # completion forever.  stats reads from here; pass ``telemetry=``
+        # to share the bundle (and its trace/event exports) with a caller.
+        self.tel = telemetry if telemetry is not None else obs.Telemetry()
+        self.snapshot_every = snapshot_every
+        self._c_submitted = self.tel.registry.counter("submitted")
+        self._c_rejected = self.tel.registry.counter("rejected")
+        self._c_completed = self.tel.registry.counter("completed")
+        self._c_expired_running = self.tel.registry.counter("expired_running")
+        self._c_expired_waiting = self.tel.registry.counter("expired_waiting")
+        self._h_latency = self.tel.registry.histogram("latency_s")
+        self._h_occupancy = self.tel.registry.histogram("occupancy")
         self._per_bucket_done: dict[int, int] = {}
         self._t_first_submit: Optional[float] = None
         self._t_last_harvest: Optional[float] = None
+        self._t_last_snapshot: Optional[float] = None
 
     # -------------------------------------------------------------- queue
     def submit(self, instance: tsp.TSPInstance,
@@ -339,7 +424,9 @@ class StreamingSolverService:
             raise ValueError(f"deadline {deadline} <= 0")
         if self.max_waiting is not None and \
                 len(self._waiting) >= self.max_waiting:
-            self._rejected += 1
+            self._c_rejected.inc()
+            self.tel.events.emit("reject", waiting=len(self._waiting),
+                                 max_waiting=self.max_waiting)
             raise AdmissionError(
                 f"waiting queue full ({len(self._waiting)} >= "
                 f"{self.max_waiting})")
@@ -372,7 +459,11 @@ class StreamingSolverService:
             req.prep(batch_mod.bucket_size(instance.n, self.min_bucket),
                      self.cfg, self.cfg.nn_k)
         self._waiting.append(req)
-        self._submitted += 1
+        self._c_submitted.inc()
+        self.tel.events.emit(
+            "submit", request_id=rid, n=instance.n,
+            bucket=batch_mod.bucket_size(instance.n, self.min_bucket),
+            iterations=its, priority=priority, deadline=deadline)
         return rid
 
     @property
@@ -394,8 +485,9 @@ class StreamingSolverService:
                 StreamingPool(bucket, self.max_batch, self.cfg,
                               self.patience,
                               per_instance_hyper=self.per_instance_hyper,
-                              device=dev)
-                for dev in self._devices]
+                              device=dev, telemetry=self.tel,
+                              dev_label=f"dev{j}")
+                for j, dev in enumerate(self._devices)]
         return self._pools[bucket]
 
     def _all_pools(self):
@@ -460,14 +552,18 @@ class StreamingSolverService:
                         best_tour=np.zeros((0,), np.int32), iterations=0,
                         gap_pct=None, latency_s=now - req.submitted_at,
                         solve_s=0.0, expired=True))
-                    self._expired_waiting += 1
+                    self._c_expired_waiting.inc()
+                    self.tel.events.emit(
+                        "evict_waiting", request_id=req.request_id,
+                        n=req.instance.n,
+                        wait_s=now - req.submitted_at)
                 else:
                     keep.append(req)
             self._waiting = keep
         for pool in self._all_pools():
             if pool.occupied:
                 got = pool.evict_expired(now)
-                self._expired_running += len(got)
+                self._c_expired_running.inc(len(got))
                 out.extend(got)
         return out
 
@@ -487,7 +583,7 @@ class StreamingSolverService:
         for pool in self._all_pools():
             if pool.occupied == 0:
                 continue
-            self._occ_samples.append(pool.occupied / pool.slots)
+            self._h_occupancy.observe(pool.occupied / pool.slots)
             pool.step_chunk(self.chunk)         # async dispatch
             stepped.append(pool)
         for pool in stepped:
@@ -496,12 +592,33 @@ class StreamingSolverService:
             done = [r for r in results if not r.expired]
             if done:
                 self._t_last_harvest = time.perf_counter()
-                self._completed += len(done)
+                self._c_completed.inc(len(done))
             for r in done:
-                self._latencies.append(r.latency_s)
+                self._h_latency.observe(r.latency_s)
                 self._per_bucket_done[r.bucket] = \
                     self._per_bucket_done.get(r.bucket, 0) + 1
+        self._maybe_snapshot()
         return results
+
+    def _maybe_snapshot(self) -> None:
+        """Periodic stats_snapshot event (``snapshot_every`` seconds):
+        the stats dict plus — with ``cfg.metrics`` — every resident
+        request's live convergence row.  The event log mirrors it to the
+        ``--events-out`` file, so a long replay leaves a time series."""
+        if self.snapshot_every <= 0:
+            return
+        now = time.perf_counter()
+        anchor = self._t_last_snapshot or self._t_first_submit
+        if anchor is not None and now - anchor >= self.snapshot_every:
+            self._t_last_snapshot = now
+            ev = {"stats": self.stats}
+            if self.cfg.metrics:
+                live = {}
+                for pool in self._all_pools():
+                    live.update({str(k): v
+                                 for k, v in pool.latest_metrics().items()})
+                ev["resident_metrics"] = live
+            self.tel.events.emit("stats_snapshot", **ev)
 
     def run_until_drained(self, max_steps: Optional[int] = None
                           ) -> list[SolveResult]:
@@ -518,18 +635,25 @@ class StreamingSolverService:
     # --------------------------------------------------------------- stats
     @property
     def stats(self) -> dict:
-        lat = self._latencies
+        """Same keys as ever, now read from the telemetry registry.  Means
+        and rates come from the histograms' exact running aggregates, so
+        they are what the old unbounded lists reported; percentiles are
+        estimated over the bounded recent-sample window (DESIGN.md §13)."""
+        lat = self._h_latency
+        completed = self._c_completed.value
+        expired = (self._c_expired_waiting.value
+                   + self._c_expired_running.value)
         wall = None
         if self._t_first_submit is not None and \
                 self._t_last_harvest is not None:
             wall = self._t_last_harvest - self._t_first_submit
         return {
-            "submitted": self._submitted,
-            "rejected": self._rejected,
-            "completed": self._completed,
-            "expired": self._expired_waiting + self._expired_running,
-            "expired_waiting": self._expired_waiting,
-            "expired_running": self._expired_running,
+            "submitted": self._c_submitted.value,
+            "rejected": self._c_rejected.value,
+            "completed": completed,
+            "expired": expired,
+            "expired_waiting": self._c_expired_waiting.value,
+            "expired_running": self._c_expired_running.value,
             "waiting": self.waiting,
             "resident": self.resident,
             "devices": len(self._devices),
@@ -540,14 +664,13 @@ class StreamingSolverService:
                       for b, ps in sorted(self._pools.items())},
             "buckets": {str(b): c
                         for b, c in sorted(self._per_bucket_done.items())},
-            "occupancy_mean": (float(np.mean(self._occ_samples))
-                               if self._occ_samples else 0.0),
-            "instances_per_s": (self._completed / wall
+            "occupancy_mean": self._h_occupancy.mean(),
+            "instances_per_s": (completed / wall
                                 if wall and wall > 0 else 0.0),
-            "latency_mean_s": float(np.mean(lat)) if lat else 0.0,
-            "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
-            "latency_p95_s": float(np.percentile(lat, 95)) if lat else 0.0,
-            "latency_max_s": float(np.max(lat)) if lat else 0.0,
+            "latency_mean_s": lat.mean(),
+            "latency_p50_s": lat.percentile(50),
+            "latency_p95_s": lat.percentile(95),
+            "latency_max_s": lat.max(),
         }
 
 

@@ -90,11 +90,16 @@ def init_sparse_colony(instance: tsp.TSPInstance, cfg: dense_aco.ACOConfig,
 @partial(jax.jit, static_argnames=("cfg", "ewt"))
 def sparse_colony_step(problem: SparseProblem, state: SparseColonyState,
                        cfg: dense_aco.ACOConfig,
-                       ewt: str) -> tuple[SparseColonyState, Array]:
+                       ewt: str) -> tuple:
     """One full sparse ACO iteration; mirrors ``aco.colony_step``.
 
     ``ewt`` (static): TSPLIB rounding rule for the lazy off-list
     distances; candidate-page distances are precomputed.
+
+    Returns (new_state, it_best_len); with ``cfg.metrics``, additionally
+    an ``obs.StepMetrics`` (tau stats over the (n, k) pages, overflow
+    adoption/eviction counts from the ovf_city delta) — read-only
+    reductions, bitwise-neutral to the state trajectory (DESIGN.md §13).
     """
     n = problem.n
     m = cfg.num_ants(n)
@@ -147,12 +152,14 @@ def sparse_colony_step(problem: SparseProblem, state: SparseColonyState,
         problem.cand, dep_tours, dep_w, rho, adopt, n_act)
 
     n_eff = n if n_act is None else n_act
+    clamp = None
     if cfg.variant == "mmas":
         tau_max = q / (rho * best_len)
         tau_min = tau_max / (2.0 * n_eff)
         tau = jnp.clip(tau, tau_min, tau_max)
         tau_def = jnp.clip(tau_def, tau_min, tau_max)
         ovf_tau = jnp.clip(ovf_tau, tau_min, tau_max)
+        clamp = (tau_min, tau_max)
     elif cfg.variant == "acs":
         tau0 = q / (n_eff * jnp.maximum(best_len, 1e-9))
         tau, tau_def, ovf_tau = pheromone.local_update_acs_sparse(
@@ -162,7 +169,22 @@ def sparse_colony_step(problem: SparseProblem, state: SparseColonyState,
     new_state = SparseColonyState(tau, tau_def, ovf_city, ovf_tau,
                                   best_tour, best_len,
                                   state.iteration + 1, key)
-    return new_state, it_best_len
+    if not cfg.metrics:
+        return new_state, it_best_len
+    from repro.obs import metrics as obs_metrics
+    # overflow churn from the ovf_city delta: a slot whose city changed to
+    # a non-empty value was adopted; if it previously held another city,
+    # that city was evicted to make room (pheromone.update_sparse's
+    # evict-weakest-iff-stronger rule).
+    changed = (ovf_city != state.ovf_city)
+    adopted = jnp.sum((changed & (ovf_city != store.OVF_EMPTY))
+                      .astype(jnp.int32))
+    evicted = jnp.sum((changed & (state.ovf_city != store.OVF_EMPTY)
+                       & (ovf_city != store.OVF_EMPTY)).astype(jnp.int32))
+    mets = obs_metrics.step_metrics(
+        res.lengths, it_best_len, best_len, improved, tau, clamp,
+        ovf_adopted=adopted, ovf_evicted=evicted)
+    return new_state, it_best_len, mets
 
 
 def run_sparse(instance: tsp.TSPInstance, cfg: dense_aco.ACOConfig,
@@ -176,5 +198,5 @@ def run_sparse(instance: tsp.TSPInstance, cfg: dense_aco.ACOConfig,
         state = init_sparse_colony(instance, cfg)
     ewt = instance.edge_weight_type
     for _ in range(int(state.iteration), cfg.iterations):
-        state, _ = sparse_colony_step(problem, state, cfg, ewt)
+        state = sparse_colony_step(problem, state, cfg, ewt)[0]
     return state

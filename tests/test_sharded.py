@@ -44,9 +44,9 @@ def test_pad_to_devices_phantom_slots():
     budgets = jnp.asarray([5, 6, 7], jnp.int32)
     since = jnp.zeros_like(budgets)
 
-    p, s, bud, sin, orig = placement.pad_to_devices(
+    p, s, bud, sin, mets, orig = placement.pad_to_devices(
         b.problem, states, budgets, since, 4)
-    assert orig == 3
+    assert orig == 3 and mets is None          # metrics off: no rows
     assert bud.shape == (4,) and sin.shape == (4,)
     assert int(bud[3]) == 0                     # phantom: already done
     np.testing.assert_array_equal(np.asarray(p.dist[3]),
@@ -54,7 +54,7 @@ def test_pad_to_devices_phantom_slots():
     np.testing.assert_array_equal(np.asarray(s.tau[3]),
                                   np.asarray(s.tau[0]))
 
-    p2, s2, bud2, _, orig2 = placement.pad_to_devices(
+    p2, s2, bud2, _, _, orig2 = placement.pad_to_devices(
         b.problem, states, budgets, since, 3)
     assert orig2 == 3 and bud2.shape == (3,)
     assert p2 is b.problem and s2 is states    # no-op when B % D == 0
