@@ -1,0 +1,159 @@
+"""Consolidated benchmark manifest: one discoverable perf-trajectory index.
+
+Every benchmark writes its own ``BENCH_<name>.json`` at the repo root;
+this module folds them into one ``BENCH_manifest.json`` — bench name →
+file, timestamp, and the *headline* numbers that summarize that bench's
+claim (streaming ips ratio, telemetry overhead %, sharded speedup, sparse
+residency ratio, ...).  The manifest is what tooling reads first:
+``benchmarks/regress.py`` resolves its tolerance checks against the
+headline paths, and ``benchmarks/run.py`` refreshes the manifest after
+every suite run (DESIGN.md §14).
+
+    PYTHONPATH=src python -m benchmarks.manifest        # (re)write it
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Optional
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MANIFEST_NAME = "BENCH_manifest.json"
+SCHEMA = "repro.bench_manifest/v1"
+
+BENCH_FILES = {
+    "construction": "BENCH_construction.json",
+    "obs": "BENCH_obs.json",
+    "quality": "BENCH_quality.json",
+    "sharded": "BENCH_sharded.json",
+    "solver": "BENCH_solver.json",
+    "sparse": "BENCH_sparse.json",
+    "streaming": "BENCH_streaming.json",
+}
+
+
+def _row(rows: list, **match) -> Optional[dict]:
+    for r in rows:
+        if all(r.get(k) == v for k, v in match.items()):
+            return r
+    return None
+
+
+def _headline_construction(p: dict) -> dict:
+    return {"nn_lazy_speedup": p["nn_lazy_speedup"],
+            "min_nn_speedup_required": p.get("min_nn_speedup_required")}
+
+
+def _headline_obs(p: dict) -> dict:
+    out = dict(p["summary"])
+    off = _row(p["rows"], level="off")
+    for r in p["rows"]:
+        out[f"{r['level']}_ips"] = r["ips"]
+        out[f"{r['level']}_lat_mean_s"] = r["lat_mean_s"]
+    if off:
+        out["off_occupancy_mean"] = off.get("occupancy_mean")
+    return out
+
+
+def _headline_quality(p: dict) -> dict:
+    out = {}
+    for r in p.get("rows", []):
+        for k in ("iroulette_gap_pct", "gumbel_gap_pct"):
+            if k in r:
+                out[f"{r['instance']}_{k}"] = r[k]
+    return out
+
+
+def _headline_sharded(p: dict) -> dict:
+    d1 = _row(p["rows"], devices=1)
+    d8 = _row(p["rows"], devices=8)
+    return {"speedup_8v1": p.get("speedup_8v1"),
+            "d1_ips": d1 and d1.get("ips"),
+            "d8_ips": d8 and d8.get("ips")}
+
+
+def _headline_solver(p: dict) -> dict:
+    out = {}
+    for r in p["rows"]:
+        out[f"b{r['bucket']}x{r['batch']}_speedup"] = r["speedup"]
+        out[f"b{r['bucket']}x{r['batch']}_batch_ips"] = r["batch_ips"]
+    return out
+
+
+def _headline_sparse(p: dict) -> dict:
+    out = {}
+    for r in p["rows"]:
+        key = f"{r['instance']}_k{r['k']}_{r['construction']}"
+        out[f"{key}_dense_over_sparse"] = r.get("dense_over_sparse")
+        out[f"{key}_resident_bytes"] = r.get("resident_bytes_sparse")
+        out[f"{key}_iters_per_s"] = r.get("iters_per_s")
+    return out
+
+
+def _headline_streaming(p: dict) -> dict:
+    out = dict(p["summary"])
+    for r in p["rows"]:
+        out[f"{r['mode']}_ips"] = r["ips"]
+        out[f"{r['mode']}_lat_mean_s"] = r["lat_mean_s"]
+    return out
+
+
+HEADLINES: dict[str, Callable[[dict], dict]] = {
+    "construction": _headline_construction,
+    "obs": _headline_obs,
+    "quality": _headline_quality,
+    "sharded": _headline_sharded,
+    "solver": _headline_solver,
+    "sparse": _headline_sparse,
+    "streaming": _headline_streaming,
+}
+
+
+def headline(name: str, payload: dict) -> dict:
+    """Headline numbers for one bench payload; unknown benches get an
+    empty headline rather than an error (forward compatibility)."""
+    fn = HEADLINES.get(name)
+    try:
+        return fn(payload) if fn else {}
+    except (KeyError, TypeError, IndexError) as e:
+        return {"_extract_error": f"{type(e).__name__}: {e}"}
+
+
+def build_manifest(root: str = ROOT) -> dict:
+    """Scan the committed BENCH files and fold them into the manifest
+    dict (benches missing on disk are listed as absent, not errors)."""
+    benches = {}
+    for name, fname in sorted(BENCH_FILES.items()):
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            benches[name] = {"file": fname, "present": False}
+            continue
+        with open(path) as f:
+            payload = json.load(f)
+        benches[name] = {
+            "file": fname,
+            "present": True,
+            "unix_time": payload.get("unix_time"),
+            "headline": headline(name, payload),
+        }
+    return {"schema": SCHEMA, "generated_unix": int(time.time()),
+            "benches": benches}
+
+
+def write_manifest(root: str = ROOT, path: Optional[str] = None) -> str:
+    path = path or os.path.join(root, MANIFEST_NAME)
+    man = build_manifest(root)
+    with open(path, "w") as f:
+        json.dump(man, f, indent=2)
+    return path
+
+
+def load_manifest(root: str = ROOT) -> dict:
+    with open(os.path.join(root, MANIFEST_NAME)) as f:
+        return json.load(f)
+
+
+if __name__ == "__main__":
+    out = write_manifest()
+    print(f"wrote {out}")

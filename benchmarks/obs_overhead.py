@@ -12,21 +12,29 @@ arrival trace through the StreamingSolverService at:
               file as records arrive (the --events-out path);
 - ``full``    ``cfg.metrics=True`` (in-jit StepMetrics rows ride the
               resident state, every result carries a metrics row) plus
-              the event-log file mirror and periodic stats snapshots.
+              the event-log file mirror and periodic stats snapshots;
+- ``serving`` everything in ``full`` plus the serving observability
+              plane (DESIGN.md §14): per-request tenant labels feeding
+              the SLO tracker, and a live ``/metrics`` endpoint being
+              scraped concurrently while the trace replays.
 
 Each level replays best-of-``REPS`` (min wall) to damp scheduler noise;
-the summary reports full/off throughput and whether it holds the <=5%
-overhead bar.  Emits ``BENCH_obs.json`` at the repo root.
+the summary reports full/off and serving/off throughput and whether
+each holds the <=5% overhead bar.  Emits ``BENCH_obs.json`` at the repo
+root.
 
     PYTHONPATH=src python benchmarks/obs_overhead.py [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import tempfile
+import threading
 import time
+import urllib.request
 
 import numpy as np
 
@@ -45,7 +53,9 @@ SMOKE_CASE = dict(bucket=32, slots=4, requests=12, min_n=17, max_n=32,
                   pressure=0.2)
 
 REPS = 3
-LEVELS = ("off", "events", "full")
+LEVELS = ("off", "events", "full", "serving")
+TENANTS = ("tenant-a", "tenant-b")
+SCRAPE_EVERY_S = 0.05
 
 
 def _make_trace(case, rate: float) -> list[streaming.TraceItem]:
@@ -56,16 +66,31 @@ def _make_trace(case, rate: float) -> list[streaming.TraceItem]:
 
 def _cfg(case, level: str) -> aco.ACOConfig:
     return aco.ACOConfig(iterations=max(case["iters"]), selection="gumbel",
-                         metrics=(level == "full"))
+                         metrics=(level in ("full", "serving")))
 
 
 def _service(case, level: str, events_path: str) -> StreamingSolverService:
     tel = obs.Telemetry(
-        events_path=events_path if level in ("events", "full") else None)
+        events_path=events_path if level != "off" else None)
     return StreamingSolverService(
         _cfg(case, level), max_batch=case["slots"],
         min_bucket=case["bucket"], chunk=case["chunk"], telemetry=tel,
-        snapshot_every=0.05 if level == "full" else 0.0)
+        snapshot_every=0.05 if level in ("full", "serving") else 0.0)
+
+
+def _scraper(url: str, stop: threading.Event) -> threading.Thread:
+    """Background thread hammering ``/metrics`` while the trace replays,
+    so the serving level pays realistic concurrent-scrape cost."""
+    def loop():
+        while not stop.is_set():
+            try:
+                urllib.request.urlopen(url, timeout=1.0).read()
+            except OSError:
+                pass
+            stop.wait(SCRAPE_EVERY_S)
+    t = threading.Thread(target=loop, name="obs-bench-scraper", daemon=True)
+    t.start()
+    return t
 
 
 def _warm(case, tmp: str) -> float:
@@ -92,18 +117,33 @@ def run_case(case) -> list[dict]:
     rate = case["requests"] / max(case["pressure"] * busy_s, 1e-3)
     trace = _make_trace(case, rate)
 
+    # serving level: identical instances/seeds/budgets, plus tenant
+    # labels (pure observability metadata — results must not change)
+    serving_trace = [dataclasses.replace(t, tenant=TENANTS[i % len(TENANTS)])
+                     for i, t in enumerate(trace)]
+
     rows = []
     for level in LEVELS:
         best = None
         for rep in range(REPS):
             svc = _service(case, level,
                            os.path.join(tmp, f"{level}_{rep}.jsonl"))
+            server = stop = None
+            if level == "serving":
+                server = obs.MetricsServer(svc.tel, health_fn=svc.health,
+                                           port=0)
+                stop = threading.Event()
+                _scraper(server.url("/metrics"), stop)
             t0 = time.perf_counter()
-            res = streaming.replay_trace(svc, trace)
+            res = streaming.replay_trace(
+                svc, serving_trace if level == "serving" else trace)
             wall = time.perf_counter() - t0
+            if server is not None:
+                stop.set()
+                server.close()
             svc.tel.close()
             assert len(res) == case["requests"]
-            if level == "full":
+            if level in ("full", "serving"):
                 assert all(r.metrics is not None for r in res)
             if best is None or wall < best[1]:
                 best = (res, wall, svc.stats["occupancy_mean"])
@@ -131,15 +171,23 @@ def main(case=CASE, out_path: str | None = DEFAULT_OUT):
         print(",".join(str(r[k]) for k in hdr))
     off = next(r for r in rows if r["level"] == "off")
     full = next(r for r in rows if r["level"] == "full")
+    serving = next(r for r in rows if r["level"] == "serving")
     ratio = full["ips"] / off["ips"]
+    sratio = serving["ips"] / off["ips"]
     summary = {
         "full_vs_off_ips": round(ratio, 4),
         "overhead_pct": round(100.0 * (1.0 - ratio), 2),
         "within_5pct": ratio >= 0.95,
+        "serving_vs_off_ips": round(sratio, 4),
+        "serving_overhead_pct": round(100.0 * (1.0 - sratio), 2),
+        "within_5pct_serving": sratio >= 0.95,
     }
     print(f"full/off throughput: {summary['full_vs_off_ips']}x "
           f"({summary['overhead_pct']}% overhead; "
           f"<=5% bar {'held' if summary['within_5pct'] else 'MISSED'})")
+    print(f"serving/off throughput: {summary['serving_vs_off_ips']}x "
+          f"({summary['serving_overhead_pct']}% overhead; "
+          f"<=5% bar {'held' if summary['within_5pct_serving'] else 'MISSED'})")
     if out_path:
         payload = {
             "benchmark": "obs_overhead",

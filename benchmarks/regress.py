@@ -1,0 +1,303 @@
+"""Bench-regression guard: machine-checked perf trajectory.
+
+Compares a *fresh* benchmark run's headline numbers against the committed
+``BENCH_*.json`` files (indexed by ``BENCH_manifest.json``) with
+per-metric tolerance bands, and exits nonzero on regression — the repo's
+first automated answer to "did this PR make the solver slower?".
+
+Tolerance policy (DESIGN.md §14): every check names a direction.
+``higher``-is-better metrics (ips, speedups, ratios) must stay above
+``committed * (1 - rel) - abs_slack``; ``lower``-is-better metrics
+(latency, overhead %, resident bytes) must stay below
+``committed * (1 + rel) + abs_slack``; ``match`` metrics (deterministic
+byte counts) must agree within the band in both directions.  Bands are
+deliberately wide for wall-clock metrics (CPU container noise) and tight
+for deterministic ones; ``--tol-scale`` widens or narrows all of them.
+
+Modes:
+
+    PYTHONPATH=src python -m benchmarks.regress --dry
+        No fresh runs: validate the manifest, the committed files, and
+        every check's extraction path (committed-vs-committed must pass
+        by construction) — the timing-insensitive CI lane.
+
+    PYTHONPATH=src python -m benchmarks.regress [--bench obs,streaming]
+        Re-run the named benches with the *same* cases the committed
+        files were produced from, then compare.  Default set is the
+        cheap pair; ``--bench all`` sweeps every bench with a runner.
+
+Exit codes: 0 pass, 1 regression, 3 plumbing error (missing manifest /
+file / metric).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import fnmatch
+import json
+import os
+import sys
+import tempfile
+from typing import Callable, Optional
+
+from . import manifest as manifest_mod
+
+ROOT = manifest_mod.ROOT
+
+
+@dataclasses.dataclass(frozen=True)
+class Check:
+    bench: str
+    metric: str                 # headline key, or fnmatch pattern
+    direction: str = "higher"   # "higher" | "lower" | "match"
+    rel: float = 0.35           # allowed relative degradation
+    abs_slack: float = 0.0      # additive slack in metric units
+
+
+# The tolerance table.  Two classes of wall-clock metric, very different
+# noise profiles on the 2-core container: *within-run ratios* (overhead
+# %, streaming/drain, batched/solo, sharded speedups) divide two
+# measurements from the same run and get moderate bands — they are the
+# real guard; *cross-run absolutes* (ips, latency) swing 2-3x with
+# machine load, so their bands are order-of-magnitude sanity floors
+# only.  Deterministic byte counts must match.
+CHECKS = [
+    # telemetry overhead (BENCH_obs.json)
+    Check("obs", "overhead_pct", "lower", rel=0.0, abs_slack=6.0),
+    Check("obs", "serving_overhead_pct", "lower", rel=0.0, abs_slack=6.0),
+    Check("obs", "full_vs_off_ips", "higher", rel=0.10),
+    Check("obs", "serving_vs_off_ips", "higher", rel=0.10),
+    Check("obs", "off_ips", "higher", rel=0.7),
+    Check("obs", "full_lat_mean_s", "lower", rel=1.5, abs_slack=0.25),
+    # streaming vs drain (BENCH_streaming.json)
+    Check("streaming", "ips_ratio", "higher", rel=0.35),
+    Check("streaming", "lat_mean_ratio", "lower", rel=0.6, abs_slack=0.25),
+    Check("streaming", "streaming_ips", "higher", rel=0.7),
+    Check("streaming", "drain_ips", "higher", rel=0.7),
+    # batched-vs-solo engine (BENCH_solver.json)
+    Check("solver", "b*_speedup", "higher", rel=0.35),
+    Check("solver", "b*_batch_ips", "higher", rel=0.7),
+    # placement layer (BENCH_sharded.json)
+    Check("sharded", "speedup_8v1", "higher", rel=0.35),
+    Check("sharded", "d8_ips", "higher", rel=0.7),
+    # sparse/paged representation (BENCH_sparse.json): residency is
+    # deterministic, throughput is wall-clock
+    Check("sparse", "*_resident_bytes", "match", rel=0.02),
+    Check("sparse", "*_dense_over_sparse", "match", rel=0.05),
+    Check("sparse", "*_iters_per_s", "higher", rel=0.7),
+    # construction hot path (BENCH_construction.json)
+    Check("construction", "nn_lazy_speedup", "higher", rel=0.35),
+    # solution quality (BENCH_quality.json): deterministic seeds, but a
+    # gap near 0 needs additive slack, not relative
+    Check("quality", "*_gap_pct", "lower", rel=0.05, abs_slack=2.0),
+]
+
+DEFAULT_BENCHES = ("obs", "streaming")
+
+
+# ------------------------------------------------------- fresh bench runs
+def _fresh_obs(out: str) -> None:
+    from . import obs_overhead
+    obs_overhead.main(obs_overhead.CASE, out_path=out)
+
+
+def _fresh_streaming(out: str) -> None:
+    from . import streaming_throughput
+    streaming_throughput.main(streaming_throughput.CASE, out_path=out)
+
+
+def _fresh_solver(out: str) -> None:
+    from . import solver_throughput
+    solver_throughput.main(solver_throughput.CASES, out_path=out)
+
+
+def _fresh_sharded(out: str) -> None:
+    from . import sharded_throughput
+    sharded_throughput.main(sharded_throughput.CASE, out_path=out)
+
+
+def _fresh_sparse(out: str) -> None:
+    from . import sparse_scale
+    sparse_scale.main(sparse_scale.CASES, out_path=out)
+
+
+def _fresh_construction(out: str) -> None:
+    from . import construction_profile
+    construction_profile.main(construction_profile.FULL_SIZES, out=out)
+
+
+def _fresh_quality(out: str) -> None:
+    from . import quality
+    quality.main(out_path=out)
+
+
+RUNNERS: dict[str, Callable[[str], None]] = {
+    "obs": _fresh_obs,
+    "streaming": _fresh_streaming,
+    "solver": _fresh_solver,
+    "sharded": _fresh_sharded,
+    "sparse": _fresh_sparse,
+    "construction": _fresh_construction,
+    "quality": _fresh_quality,
+}
+
+
+# ------------------------------------------------------------- comparison
+def _flatten(headline: dict) -> dict[str, float]:
+    """Numeric leaves of a headline dict, nested dicts flattened with
+    dotted keys (``nn_lazy_speedup.256``)."""
+    out: dict[str, float] = {}
+    for k, v in headline.items():
+        if isinstance(v, dict):
+            for kk, vv in _flatten(v).items():
+                out[f"{k}.{kk}"] = vv
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[k] = float(v)
+    return out
+
+
+def _match_keys(flat: dict, pattern: str) -> list[str]:
+    if pattern in flat:
+        return [pattern]
+    return sorted(k for k in flat
+                  if fnmatch.fnmatch(k, pattern)
+                  or fnmatch.fnmatch(k.split(".", 1)[0], pattern))
+
+
+def evaluate(check: Check, committed: float, fresh: float,
+             tol_scale: float = 1.0) -> tuple[bool, str]:
+    rel = check.rel * tol_scale
+    slack = check.abs_slack * tol_scale
+    if check.direction == "higher":
+        bound = committed * (1.0 - rel) - slack
+        ok = fresh >= bound
+        desc = f">= {bound:.4g}"
+    elif check.direction == "lower":
+        bound = committed * (1.0 + rel) + slack
+        ok = fresh <= bound
+        desc = f"<= {bound:.4g}"
+    elif check.direction == "match":
+        band = rel * max(abs(committed), 1e-12) + slack
+        ok = abs(fresh - committed) <= band
+        desc = f"within +-{band:.4g} of {committed:.4g}"
+    else:
+        raise ValueError(f"unknown direction {check.direction!r}")
+    return ok, desc
+
+
+def _load_payload(root: str, fname: str) -> dict:
+    with open(os.path.join(root, fname)) as f:
+        return json.load(f)
+
+
+def run_checks(benches: list[str], dry: bool, tol_scale: float,
+               root: str = ROOT) -> int:
+    """Run the guard; returns the process exit code."""
+    man_path = os.path.join(root, manifest_mod.MANIFEST_NAME)
+    if not os.path.exists(man_path):
+        print(f"regress: no {manifest_mod.MANIFEST_NAME} at {root} — run "
+              f"`python -m benchmarks.manifest` first", file=sys.stderr)
+        return 3
+    man = manifest_mod.load_manifest(root)
+    if man.get("schema") != manifest_mod.SCHEMA:
+        print(f"regress: unexpected manifest schema {man.get('schema')!r}",
+              file=sys.stderr)
+        return 3
+
+    failures = 0
+    plumbing = 0
+    checked = 0
+    for bench in benches:
+        entry = man["benches"].get(bench)
+        if not entry or not entry.get("present"):
+            print(f"regress: [{bench}] no committed BENCH file — skipped")
+            continue
+        committed_payload = _load_payload(root, entry["file"])
+        committed = _flatten(
+            manifest_mod.headline(bench, committed_payload))
+        # sanity: the manifest's stored headline must agree with a fresh
+        # extraction of the committed file (catches drifted manifests)
+        stored = _flatten(entry.get("headline", {}))
+        for k, v in stored.items():
+            if k in committed and abs(committed[k] - v) > 1e-9:
+                print(f"regress: [{bench}] manifest headline {k} "
+                      f"({v}) != committed file ({committed[k]}) — "
+                      f"regenerate the manifest", file=sys.stderr)
+                plumbing += 1
+
+        if dry:
+            fresh = dict(committed)
+        else:
+            runner = RUNNERS.get(bench)
+            if runner is None:
+                print(f"regress: [{bench}] no fresh runner — skipped")
+                continue
+            out = os.path.join(tempfile.mkdtemp(prefix="regress_"),
+                               f"{bench}.json")
+            print(f"regress: [{bench}] fresh run -> {out}")
+            runner(out)
+            fresh = _flatten(
+                manifest_mod.headline(bench, _load_payload(root=os.path.
+                                      dirname(out), fname=os.path.
+                                      basename(out))))
+
+        bench_checks = [c for c in CHECKS if c.bench == bench]
+        for check in bench_checks:
+            keys = _match_keys(committed, check.metric)
+            if not keys:
+                print(f"regress: [{bench}] metric {check.metric!r} not in "
+                      f"committed headline — check table out of date",
+                      file=sys.stderr)
+                plumbing += 1
+                continue
+            for key in keys:
+                if key not in fresh:
+                    print(f"regress: [{bench}] {key}: missing from fresh "
+                          f"run", file=sys.stderr)
+                    plumbing += 1
+                    continue
+                ok, band = evaluate(check, committed[key], fresh[key],
+                                    tol_scale)
+                checked += 1
+                status = "ok" if ok else "REGRESSION"
+                print(f"regress: [{bench}] {key}: committed="
+                      f"{committed[key]:.4g} fresh={fresh[key]:.4g} "
+                      f"({check.direction}, {band}) {status}")
+                if not ok:
+                    failures += 1
+
+    print(f"regress: {checked} checks, {failures} regressions, "
+          f"{plumbing} plumbing errors"
+          + (" (dry)" if dry else ""))
+    if plumbing:
+        return 3
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="no fresh runs: validate manifest + tolerance "
+                         "plumbing against the committed files only")
+    ap.add_argument("--bench", default=None,
+                    help="comma-separated benches to run fresh (default "
+                         f"{','.join(DEFAULT_BENCHES)}; 'all' = every "
+                         "bench with a runner); --dry checks all benches")
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="multiply every tolerance band (2.0 = twice as "
+                         "forgiving)")
+    args = ap.parse_args()
+    if args.dry:
+        benches = (args.bench.split(",") if args.bench
+                   else sorted(manifest_mod.BENCH_FILES))
+    elif args.bench == "all":
+        benches = sorted(RUNNERS)
+    elif args.bench:
+        benches = args.bench.split(",")
+    else:
+        benches = list(DEFAULT_BENCHES)
+    sys.exit(run_checks(benches, args.dry, args.tol_scale))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import sys
 import time
 
 from . import (construction_profile, fig4_overall, fig5_pheromone,
-               local_search, obs_overhead, quality, roofline,
+               local_search, manifest, obs_overhead, quality, roofline,
                sharded_throughput, solver_throughput, sparse_scale,
                streaming_throughput, table2_tour_construction,
                table3_pheromone)
@@ -55,6 +55,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(TABLES))
+    ap.add_argument("--no-manifest", action="store_true",
+                    help="skip refreshing BENCH_manifest.json at the end")
     args = ap.parse_args()
     names = list(TABLES) if not args.only else args.only.split(",")
     for name in names:
@@ -65,6 +67,10 @@ def main() -> None:
         print(f"==== {name} " + "=" * 50)
         TABLES[name](args.full)
         print(f"---- {name} done in {time.time()-t0:.1f}s\n", flush=True)
+    if not args.no_manifest:
+        # fold whatever BENCH_*.json files now exist into the manifest so
+        # benchmarks/regress.py sees a consistent index (DESIGN.md §14)
+        print(f"manifest refreshed: {manifest.write_manifest()}")
 
 
 if __name__ == "__main__":

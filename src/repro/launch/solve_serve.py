@@ -26,6 +26,21 @@ slot-lifecycle event log; ``--stats-every`` emits periodic stats_snapshot
 events during a ``--stream`` replay and ``--jax-profile-dir`` wraps the
 run in a jax.profiler capture.
 
+Serving observability plane (DESIGN.md §14): ``--metrics-port`` serves
+``GET /metrics`` (Prometheus text), ``/healthz`` (pool liveness +
+occupancy) and ``/snapshot`` (the ``repro.obs/v1`` JSON) from a
+background thread for the whole run; ``--metrics-hold`` keeps it up
+after the drain for external scrapers.  ``--tenant a,b`` cycles tenant
+labels over the workload — per-tenant SLO attainment and latency
+quantiles then appear in ``/metrics`` and in the report's
+``stats.tenants``:
+
+    PYTHONPATH=src python -m repro.launch.solve_serve --stream \\
+        --num-instances 8 --iterations 10 \\
+        --metrics-port 9100 --metrics-hold 30 --tenant demo,batch &
+    curl -s localhost:9100/metrics | grep slo_attainment
+    curl -s localhost:9100/healthz
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.solve_serve \
         --num-instances 8 --min-n 12 --max-n 48 --iterations 20
@@ -44,6 +59,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 
 import numpy as np
 
@@ -90,17 +106,45 @@ def _report(results, stats) -> None:
                "bucket": r.bucket, "best_len": r.best_len,
                "iterations": r.iterations, "gap_pct": r.gap_pct,
                "latency_s": r.latency_s}
+        if r.trace_id:
+            row["trace_id"] = r.trace_id
+        if r.tenant is not None:
+            row["tenant"] = r.tenant
         if r.expired:
             row["expired"] = True
         if r.metrics is not None:
             row["metrics"] = r.metrics
         rows.append(row)
+    # flush: under --metrics-hold the process may be killed right after
+    # the hold starts, and the redirected report must already be on disk
     print(json.dumps(_round({
         "schema": "repro.solve_serve/v1",
         "results": rows,
         "mean_gap_pct": float(np.mean(gaps)) if gaps else None,
         "stats": stats,
-    }), indent=2))
+    }), indent=2), flush=True)
+
+
+def _start_metrics_server(args, tel, svc):
+    """Bind the exposition endpoint (obs.serving.MetricsServer) over the
+    run's Telemetry with the service's live health view; announces the
+    bound port on stderr (stdout stays pure JSON for the report)."""
+    if args.metrics_port is None:
+        return None
+    server = obs.MetricsServer(tel, health_fn=svc.health,
+                               snapshot_extra_fn=lambda: {"stats": svc.stats},
+                               port=args.metrics_port)
+    print(f"solve_serve: metrics endpoint on "
+          f"http://127.0.0.1:{server.port} "
+          f"(/metrics /healthz /snapshot)", file=sys.stderr)
+    return server
+
+
+def _hold_endpoint(args, server) -> None:
+    """--metrics-hold: keep serving after the drain so an external
+    scraper (the CI observability lane) can read the final state."""
+    if server is not None and args.metrics_hold > 0:
+        time.sleep(args.metrics_hold)
 
 
 def main() -> None:
@@ -171,6 +215,22 @@ def main() -> None:
     ap.add_argument("--jax-profile-dir", default=None,
                     help="capture a jax.profiler trace (XPlane/TensorBoard)"
                          " of the whole run into this directory")
+    # serving observability plane (repro.obs.serving, DESIGN.md §14)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve GET /metrics (Prometheus text), /healthz "
+                         "(pool liveness + occupancy JSON) and /snapshot "
+                         "(repro.obs/v1 JSON) on this port for the whole "
+                         "run (0 = ephemeral; the bound port is printed "
+                         "to stderr)")
+    ap.add_argument("--metrics-hold", type=float, default=0.0,
+                    help="keep the --metrics-port endpoint up this many "
+                         "seconds after the workload drains (lets an "
+                         "external scraper read the final state)")
+    ap.add_argument("--tenant", default=None,
+                    help="tenant label(s) for per-tenant SLO accounting: "
+                         "a single label, or a comma-separated list "
+                         "cycled across the workload (labels never touch "
+                         "the solve)")
     args = ap.parse_args()
 
     cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
@@ -183,6 +243,8 @@ def main() -> None:
     mesh = make_data_mesh(args.devices) if args.shard else None
     tel = obs.Telemetry(events_path=args.events_out,
                         jax_profile_dir=args.jax_profile_dir)
+    tenants = (args.tenant.split(",") if args.tenant else None)
+    server = None
 
     try:
         tel.profile_start()
@@ -196,10 +258,12 @@ def main() -> None:
                 max_waiting=args.max_waiting,
                 per_instance_hyper=args.per_instance_hyper, mesh=mesh,
                 telemetry=tel, snapshot_every=args.stats_every)
+            server = _start_metrics_server(args, tel, svc)
             trace = make_poisson_trace(args.num_instances, args.arrival_rate,
                                        args.min_n, args.max_n,
                                        seed=args.seed,
-                                       iterations=args.iterations)
+                                       iterations=args.iterations,
+                                       tenants=tenants)
             results = replay_trace(svc, trace)
             _report(sorted(results, key=lambda r: r.request_id), svc.stats)
         else:
@@ -210,21 +274,28 @@ def main() -> None:
                                 patience=args.patience,
                                 checkpoint_dir=args.checkpoint_dir,
                                 mesh=mesh, telemetry=tel)
-            for inst in make_workload(args.num_instances, args.min_n,
-                                      args.max_n, args.seed):
-                svc.submit(inst)
+            server = _start_metrics_server(args, tel, svc)
+            for i, inst in enumerate(make_workload(
+                    args.num_instances, args.min_n, args.max_n, args.seed)):
+                svc.submit(inst, tenant=(tenants[i % len(tenants)]
+                                         if tenants else None))
             results = svc.run()
             _report(results, svc.stats)
         if args.metrics_out:
             tel.write_metrics(args.metrics_out, extra={"stats": svc.stats})
         if args.trace_out:
             tel.write_trace(args.trace_out)
+        # hold last: the report and exports are already on disk, so the
+        # external scraper can kill us whenever it has what it needs
+        _hold_endpoint(args, server)
     except UnsupportedKernelRoute as e:
         # one actionable line instead of a traceback (DESIGN.md §10/§12:
         # the route checker's message already says which flag to drop)
         print(f"solve_serve: {e}", file=sys.stderr)
         sys.exit(2)
     finally:
+        if server is not None:
+            server.close()
         tel.close()
 
 

@@ -13,6 +13,12 @@ Three layers:
    ``repro.obs/v1`` metrics snapshots, and ``jax.profiler`` hooks —
    surfaced by ``launch.solve_serve --metrics-out/--trace-out/
    --events-out``.
+4. **Serving plane** (``serving``, DESIGN.md §14): per-tenant SLO
+   accounting (``SloTracker`` over labeled registry families), the
+   Prometheus text renderer, and the ``MetricsServer`` background
+   ``/metrics``+``/healthz``+``/snapshot`` endpoint — wired in by
+   ``solve_serve --metrics-port``; ``validate`` holds the schema-level
+   trace/event well-formedness checks tests and CI run.
 
 ``Telemetry`` bundles one registry + tracer + event log; services take an
 optional instance and default to a private in-memory one, so telemetry is
@@ -22,9 +28,10 @@ from __future__ import annotations
 
 from typing import Optional
 
-from . import metrics, registry, trace
+from . import metrics, registry, serving, trace, validate
 from .metrics import StepMetrics
 from .registry import Registry
+from .serving import MetricsServer, SloTracker, render_prometheus
 from .trace import EventLog, Tracer
 
 SCHEMA = "repro.obs/v1"
@@ -89,4 +96,5 @@ class Telemetry:
 
 
 __all__ = ["Telemetry", "Registry", "Tracer", "EventLog", "StepMetrics",
-           "SCHEMA", "metrics", "registry", "trace"]
+           "MetricsServer", "SloTracker", "render_prometheus",
+           "SCHEMA", "metrics", "registry", "serving", "trace", "validate"]

@@ -115,6 +115,20 @@ class Tracer:
         self._push({"ph": "C", "name": name, "pid": pid, "tid": 0,
                     "ts": self.now_us(), "args": values})
 
+    def request_chain(self, request_id) -> list[dict]:
+        """Recover one request's span chain (DESIGN.md §14): every event
+        whose args carry its ``request_id`` — the retroactive ``queued``
+        span, the slot-residency span, each ``chunk_dispatch`` listing it
+        resident — sorted by timestamp.  The same filter an operator runs
+        in the Perfetto UI, as an API."""
+        out = []
+        for ev in self._events:
+            args = ev.get("args") or {}
+            if args.get("request_id") == request_id or \
+                    request_id in (args.get("request_ids") or ()):
+                out.append(ev)
+        return sorted(out, key=lambda e: e.get("ts", 0.0))
+
     # ------------------------------------------------------------- export
     def to_chrome(self) -> dict:
         return {"traceEvents": self._meta + list(self._events),

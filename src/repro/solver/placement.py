@@ -53,6 +53,18 @@ def data_mesh(devices: Optional[int] = None, axis: str = "data") -> Mesh:
     return Mesh(jax.devices()[:n], (axis,))
 
 
+def device_label(device, index: int) -> str:
+    """Stable human-readable label for one mesh position — the Chrome
+    trace *process* name of that device's streaming pools and the
+    ``device`` field of request-scoped lifecycle events, so one
+    request's journey through a sharded mesh can name the physical
+    device it ran on (DESIGN.md §14).  ``device=None`` (the default,
+    single-device route) stays the bare ``dev<i>``."""
+    if device is None:
+        return f"dev{index}"
+    return f"dev{index}:{device.platform}{device.id}"
+
+
 def pad_to_devices(problem: aco.Problem, states: aco.ColonyState,
                    budgets: Array, since: Array, multiple: int,
                    mets=None):

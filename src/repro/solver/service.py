@@ -20,6 +20,7 @@ import dataclasses
 import math
 import os
 import time
+import uuid
 from typing import Optional
 
 import jax.numpy as jnp
@@ -42,6 +43,10 @@ class SolveRequest:
     iterations: int
     seed: int
     submitted_at: float
+    # Request-scoped observability (DESIGN.md §14): host-side correlation
+    # fields only — neither reaches the solve.
+    trace_id: str = ""
+    tenant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -64,6 +69,10 @@ class SolveResult:
     # harvest — final stagnation, tau saturation, LS acceptance, ... —
     # None unless the solve ran with ``ACOConfig.metrics=True``.
     metrics: Optional[dict] = None
+    # Request-scoped correlation (DESIGN.md §14): the trace id minted at
+    # submit and the caller's tenant label (None = untagged).
+    trace_id: str = ""
+    tenant: Optional[str] = None
 
 
 class SolverService:
@@ -105,6 +114,11 @@ class SolverService:
         # each result carries its in-jit convergence row.  The default
         # private bundle costs microseconds; pass ``telemetry=`` to export.
         self.tel = telemetry if telemetry is not None else obs.Telemetry()
+        # Serving observability plane (DESIGN.md §14): per-tenant SLO
+        # accounting over labeled registry families + a service birth
+        # stamp for /healthz uptime.
+        self.slo = obs.SloTracker(self.tel.registry)
+        self._t_started = time.perf_counter()
         self._queue: list[SolveRequest] = []
         self._next_id = 0
         self._jobs_run = 0
@@ -113,17 +127,23 @@ class SolverService:
     # ------------------------------------------------------------- queue
     def submit(self, instance: tsp.TSPInstance,
                iterations: Optional[int] = None,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None,
+               tenant: Optional[str] = None) -> int:
         rid = self._next_id
         self._next_id += 1
+        trace_id = uuid.uuid4().hex[:16]
         self._queue.append(SolveRequest(
             request_id=rid, instance=instance,
             iterations=iterations if iterations is not None
             else self.cfg.iterations,
             seed=seed if seed is not None else self.cfg.seed + rid,
-            submitted_at=time.perf_counter()))
+            submitted_at=time.perf_counter(),
+            trace_id=trace_id, tenant=tenant))
         self.tel.registry.counter("submitted").inc()
-        self.tel.events.emit("submit", request_id=rid, n=instance.n,
+        self.slo.on_submit(tenant)
+        self.tel.events.emit("submit", request_id=rid, trace_id=trace_id,
+                             tenant=obs.SloTracker.tenant_label(tenant),
+                             n=instance.n,
                              bucket=batch_mod.bucket_size(instance.n,
                                                           self.min_bucket))
         return rid
@@ -131,6 +151,18 @@ class SolverService:
     @property
     def pending(self) -> int:
         return len(self._queue)
+
+    def health(self) -> dict:
+        """Liveness view for the ``/healthz`` endpoint (DESIGN.md §14)."""
+        return {
+            "mode": "drain",
+            "uptime_s": time.perf_counter() - self._t_started,
+            "pending": self.pending,
+            "jobs_run": self._jobs_run,
+            "devices": (int(np.prod(list(self.mesh.shape.values())))
+                        if self.mesh is not None else 1),
+            "tenants": sorted(self.slo.tenants),
+        }
 
     # --------------------------------------------------------- scheduler
     def run(self) -> list[SolveResult]:
@@ -165,6 +197,8 @@ class SolverService:
             "instances_per_s": len(queue) / max(wall, 1e-9),
             "latency_mean_s": float(np.mean(lat)),
             "latency_max_s": float(np.max(lat)),
+            "uptime_s": time.perf_counter() - self._t_started,
+            "tenants": self.slo.summary(),
         }
         return sorted(results, key=lambda r: r.request_id)
 
@@ -196,9 +230,13 @@ class SolverService:
         metrics_on = self.cfg.metrics
 
         t0 = time.perf_counter()
+        for req in reqs:               # queue wait ends at job dispatch
+            self.slo.on_admit(req.tenant, t0 - req.submitted_at)
         with self.tel.tracer.span("dispatch", thread=thread, job=job_id,
                                   bucket=bucket, batch=len(reqs),
-                                  max_iters=max_it):
+                                  max_iters=max_it,
+                                  request_ids=[r.request_id
+                                               for r in reqs]):
             if self.checkpoint_dir:
                 # checkpointed state = (ColonyState, stagnation counters,
                 # [metrics rows]): everything the chunked loop carries must
@@ -242,6 +280,7 @@ class SolverService:
             for k, (req, row) in enumerate(
                     zip(reqs, engine.collect(states, b))):
                 opt = row["known_optimum"]
+                latency_s = now - req.submitted_at
                 out.append(SolveResult(
                     request_id=req.request_id, name=row["name"],
                     n=row["n"], bucket=bucket, best_len=row["best_len"],
@@ -249,10 +288,21 @@ class SolverService:
                     iterations=row["iterations"],
                     gap_pct=(100.0 * (row["best_len"] / opt - 1.0)
                              if opt else None),
-                    latency_s=now - req.submitted_at, solve_s=solve_s,
+                    latency_s=latency_s, solve_s=solve_s,
                     metrics=(obs_metrics.to_host(mets, k)
-                             if mets is not None else None)))
+                             if mets is not None else None),
+                    trace_id=req.trace_id, tenant=req.tenant))
+                self.slo.on_outcome(req.tenant, "completed", latency_s,
+                                    None)
+                self.tel.events.emit(
+                    "harvest", request_id=req.request_id,
+                    trace_id=req.trace_id,
+                    tenant=obs.SloTracker.tenant_label(req.tenant),
+                    bucket=bucket, job_id=job_id,
+                    best_len=row["best_len"],
+                    iterations=row["iterations"], latency_s=latency_s)
             self.tel.registry.counter("completed").inc(len(out))
             self.tel.events.emit("job", job_id=job_id, bucket=bucket,
-                                 batch=len(out), solve_s=solve_s)
+                                 batch=len(out), solve_s=solve_s,
+                                 request_ids=[r.request_id for r in reqs])
         return out

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import uuid
 from typing import Optional, Sequence, Union
 
 import jax
@@ -59,6 +60,7 @@ from repro.obs import metrics as obs_metrics
 
 from . import batch as batch_mod
 from . import engine
+from . import placement
 from .service import SolveResult
 
 
@@ -81,6 +83,14 @@ class StreamRequest:
     hyper: Optional[aco.Hyper] = None
     submitted_at: float = 0.0
     expires_at: Optional[float] = None  # absolute perf_counter seconds
+    # Request-scoped observability (DESIGN.md §14): ``trace_id`` is minted
+    # at submit and carried — with ``request_id`` and the optional
+    # ``tenant`` label — on every lifecycle event and span the request
+    # touches, so its full submit -> admit -> slot -> harvest journey is
+    # reconstructable from one trace/event log.  Host-side only: neither
+    # field reaches the solve (bitwise on==off, tests/test_serving.py).
+    trace_id: str = ""
+    tenant: Optional[str] = None
     # Prepped at submit time (off the stepping critical path): the padded
     # Problem and fresh ColonyState the refill surgery writes into a slot.
     prob: Optional[aco.Problem] = None
@@ -110,7 +120,8 @@ class StreamingPool:
                  patience: int = 0, nn_k: Optional[int] = None,
                  per_instance_hyper: bool = False, device=None,
                  telemetry: Optional[obs.Telemetry] = None,
-                 dev_label: str = "dev0"):
+                 dev_label: str = "dev0",
+                 slo: Optional[obs.SloTracker] = None):
         self.bucket = bucket
         self.slots = slots
         self.cfg = cfg
@@ -123,6 +134,11 @@ class StreamingPool:
         # pool's Chrome-trace process track.
         self.tel = telemetry if telemetry is not None else obs.Telemetry()
         self.dev_label = dev_label
+        # Per-tenant SLO accounting (DESIGN.md §14): the service shares
+        # one tracker across its pools; a standalone pool gets a private
+        # one over its own registry.
+        self.slo = slo if slo is not None else obs.SloTracker(
+            self.tel.registry)
         # Per-device placement (DESIGN.md §11): committing the resident
         # pytrees to one device pins every chunk step there — the
         # topology-aware service runs one pool per mesh device and the
@@ -199,11 +215,25 @@ class StreamingPool:
             self.mets = jax.tree.map(lambda M: M.at[ix].set(0), self.mets)
         for i, req in assignments:        # resident copies own the data now
             req.prob = req.state = None
+            wait_s = now - req.submitted_at
+            self.slo.on_admit(req.tenant, wait_s)
             self.tel.events.emit(
-                "admit", request_id=req.request_id, slot=i,
+                "admit", request_id=req.request_id,
+                trace_id=req.trace_id,
+                tenant=obs.SloTracker.tenant_label(req.tenant), slot=i,
                 bucket=self.bucket, device=self.dev_label,
                 n=req.instance.n, iterations=req.iterations,
-                wait_s=now - req.submitted_at)
+                wait_s=wait_s)
+            # Retroactive queue-wait span (submit -> admit) on the shared
+            # "queue" track: together with the residency span stamped at
+            # harvest, the request's whole journey is one span chain
+            # findable by request_id/trace_id (DESIGN.md §14).
+            self.tel.tracer.complete(
+                f"queued req{req.request_id}",
+                self.tel.tracer.to_us(req.submitted_at), wait_s * 1e6,
+                process="queue", thread=f"b{self.bucket}",
+                request_id=req.request_id, trace_id=req.trace_id,
+                tenant=obs.SloTracker.tenant_label(req.tenant))
 
     # ------------------------------------------------------------ stepping
     def step_chunk(self, chunk: int) -> None:
@@ -220,7 +250,10 @@ class StreamingPool:
         when a jax.profiler capture is live, as a named profiler step."""
         with self.tel.tracer.span("chunk_dispatch", process=self.dev_label,
                                   thread=f"b{self.bucket}",
-                                  occupied=self.occupied, chunk=chunk), \
+                                  occupied=self.occupied, chunk=chunk,
+                                  request_ids=[r.request_id
+                                               for r in self.requests
+                                               if r is not None]), \
                 self.tel.step_annotation("chunk_step", step_num=self.chunks):
             out = engine.run_batch(
                 self.problem, self.states, self.budgets, self.cfg, chunk,
@@ -269,6 +302,8 @@ class StreamingPool:
             inst = req.instance
             opt = inst.known_optimum
             best_len = float(lens[i])
+            latency_s = now - req.submitted_at
+            tenant = obs.SloTracker.tenant_label(req.tenant)
             mrow = (obs_metrics.to_host(self.mets, i)
                     if self.mets is not None else None)
             out.append(SolveResult(
@@ -277,18 +312,23 @@ class StreamingPool:
                 best_tour=batch_mod.trim_tour(tours[i], inst.n),
                 iterations=int(it[i]),
                 gap_pct=(100.0 * (best_len / opt - 1.0) if opt else None),
-                latency_s=now - req.submitted_at,
+                latency_s=latency_s,
                 solve_s=now - self.filled_at[i], expired=expired,
-                metrics=mrow))
+                metrics=mrow, trace_id=req.trace_id, tenant=req.tenant))
             self.requests[i] = None
             freed.append(i)
+            self.slo.on_outcome(
+                req.tenant,
+                "expired_running" if expired else "completed",
+                latency_s, req.deadline)
             # slot-lifecycle record + a residency span on this slot's
             # Chrome-trace lane (fill -> free, stamped retroactively)
             kind = "evict" if expired else "harvest"
-            ev = dict(request_id=req.request_id, slot=i,
+            ev = dict(request_id=req.request_id, trace_id=req.trace_id,
+                      tenant=tenant, slot=i,
                       bucket=self.bucket, device=self.dev_label,
                       iterations=int(it[i]), best_len=best_len,
-                      latency_s=now - req.submitted_at)
+                      latency_s=latency_s)
             if mrow is not None:
                 ev["metrics"] = mrow
             self.tel.events.emit(kind, **ev)
@@ -297,7 +337,8 @@ class StreamingPool:
                 self.tel.tracer.to_us(self.filled_at[i]),
                 (now - self.filled_at[i]) * 1e6,
                 process=self.dev_label, thread=f"b{self.bucket}/s{i}",
-                request_id=req.request_id, n=inst.n,
+                request_id=req.request_id, trace_id=req.trace_id,
+                tenant=tenant, n=inst.n,
                 iterations=int(it[i]), expired=expired)
         self.budgets = self.budgets.at[jnp.asarray(freed)].set(0)
         return out
@@ -396,6 +437,11 @@ class StreamingSolverService:
         # to share the bundle (and its trace/event exports) with a caller.
         self.tel = telemetry if telemetry is not None else obs.Telemetry()
         self.snapshot_every = snapshot_every
+        # Serving observability plane (DESIGN.md §14): one per-tenant SLO
+        # tracker shared by every pool, and a monotonic service birth
+        # stamp every stats_snapshot carries as ``uptime_s``.
+        self.slo = obs.SloTracker(self.tel.registry)
+        self._t_started = time.perf_counter()
         self._c_submitted = self.tel.registry.counter("submitted")
         self._c_rejected = self.tel.registry.counter("rejected")
         self._c_completed = self.tel.registry.counter("completed")
@@ -413,20 +459,25 @@ class StreamingSolverService:
                iterations: Optional[int] = None,
                seed: Optional[int] = None, priority: int = 0,
                deadline: Optional[float] = None,
-               hyper: Union[aco.Hyper, dict, None] = None) -> int:
+               hyper: Union[aco.Hyper, dict, None] = None,
+               tenant: Optional[str] = None) -> int:
         """Queue a request; returns its id.  Raises AdmissionError when the
         waiting queue is full (backpressure) — resident slots don't count,
         only un-admitted requests.  ``deadline`` is a latency budget in
         seconds from now: it orders admission (tighter first) and, once
         exceeded, the request is evicted at the next step() as an
-        ``expired`` result."""
+        ``expired`` result.  ``tenant`` is a pure observability label
+        (per-tenant SLO accounting, DESIGN.md §14): it never influences
+        ordering, placement or the solve itself."""
         if deadline is not None and deadline <= 0:
             raise ValueError(f"deadline {deadline} <= 0")
         if self.max_waiting is not None and \
                 len(self._waiting) >= self.max_waiting:
             self._c_rejected.inc()
+            self.slo.on_reject(tenant)
             self.tel.events.emit("reject", waiting=len(self._waiting),
-                                 max_waiting=self.max_waiting)
+                                 max_waiting=self.max_waiting,
+                                 tenant=obs.SloTracker.tenant_label(tenant))
             raise AdmissionError(
                 f"waiting queue full ({len(self._waiting)} >= "
                 f"{self.max_waiting})")
@@ -451,7 +502,8 @@ class StreamingSolverService:
             seed=seed if seed is not None else self.cfg.seed + rid,
             priority=priority, deadline=deadline, hyper=hyper,
             submitted_at=now,
-            expires_at=None if deadline is None else now + deadline)
+            expires_at=None if deadline is None else now + deadline,
+            trace_id=uuid.uuid4().hex[:16], tenant=tenant)
         # Prep the padded problem + initial state at enqueue time (so
         # refill surgery on the stepping critical path is only .at[ix].set)
         # — but only within the bounded look-ahead window.
@@ -460,8 +512,10 @@ class StreamingSolverService:
                      self.cfg, self.cfg.nn_k)
         self._waiting.append(req)
         self._c_submitted.inc()
+        self.slo.on_submit(tenant)
         self.tel.events.emit(
-            "submit", request_id=rid, n=instance.n,
+            "submit", request_id=rid, trace_id=req.trace_id,
+            tenant=obs.SloTracker.tenant_label(tenant), n=instance.n,
             bucket=batch_mod.bucket_size(instance.n, self.min_bucket),
             iterations=its, priority=priority, deadline=deadline)
         return rid
@@ -486,7 +540,8 @@ class StreamingSolverService:
                               self.patience,
                               per_instance_hyper=self.per_instance_hyper,
                               device=dev, telemetry=self.tel,
-                              dev_label=f"dev{j}")
+                              dev_label=placement.device_label(dev, j),
+                              slo=self.slo)
                 for j, dev in enumerate(self._devices)]
         return self._pools[bucket]
 
@@ -543,20 +598,33 @@ class StreamingSolverService:
             keep: list[StreamRequest] = []
             for req in self._waiting:
                 if req.expires_at is not None and req.expires_at <= now:
+                    wait_s = now - req.submitted_at
+                    bucket = batch_mod.bucket_size(req.instance.n,
+                                                   self.min_bucket)
                     out.append(SolveResult(
                         request_id=req.request_id, name=req.instance.name,
-                        n=req.instance.n,
-                        bucket=batch_mod.bucket_size(req.instance.n,
-                                                     self.min_bucket),
+                        n=req.instance.n, bucket=bucket,
                         best_len=float("inf"),
                         best_tour=np.zeros((0,), np.int32), iterations=0,
-                        gap_pct=None, latency_s=now - req.submitted_at,
-                        solve_s=0.0, expired=True))
+                        gap_pct=None, latency_s=wait_s,
+                        solve_s=0.0, expired=True,
+                        trace_id=req.trace_id, tenant=req.tenant))
                     self._c_expired_waiting.inc()
+                    self.slo.on_outcome(req.tenant, "expired_waiting",
+                                        wait_s, req.deadline)
+                    tenant = obs.SloTracker.tenant_label(req.tenant)
                     self.tel.events.emit(
                         "evict_waiting", request_id=req.request_id,
-                        n=req.instance.n,
-                        wait_s=now - req.submitted_at)
+                        trace_id=req.trace_id, tenant=tenant,
+                        n=req.instance.n, wait_s=wait_s)
+                    # never admitted: its whole life is one queue span
+                    self.tel.tracer.complete(
+                        f"queued req{req.request_id}!",
+                        self.tel.tracer.to_us(req.submitted_at),
+                        wait_s * 1e6, process="queue",
+                        thread=f"b{bucket}",
+                        request_id=req.request_id, trace_id=req.trace_id,
+                        tenant=tenant, expired=True)
                 else:
                     keep.append(req)
             self._waiting = keep
@@ -604,21 +672,27 @@ class StreamingSolverService:
         """Periodic stats_snapshot event (``snapshot_every`` seconds):
         the stats dict plus — with ``cfg.metrics`` — every resident
         request's live convergence row.  The event log mirrors it to the
-        ``--events-out`` file, so a long replay leaves a time series."""
+        ``--events-out`` file, so a long replay leaves a time series.
+
+        The *first* snapshot fires immediately (the old anchor-on-
+        previous-emit skipped it until one full period had passed), and
+        every snapshot stamps a monotonic-clock ``uptime_s`` measured
+        from service construction."""
         if self.snapshot_every <= 0:
             return
         now = time.perf_counter()
-        anchor = self._t_last_snapshot or self._t_first_submit
-        if anchor is not None and now - anchor >= self.snapshot_every:
-            self._t_last_snapshot = now
-            ev = {"stats": self.stats}
-            if self.cfg.metrics:
-                live = {}
-                for pool in self._all_pools():
-                    live.update({str(k): v
-                                 for k, v in pool.latest_metrics().items()})
-                ev["resident_metrics"] = live
-            self.tel.events.emit("stats_snapshot", **ev)
+        if self._t_last_snapshot is not None and \
+                now - self._t_last_snapshot < self.snapshot_every:
+            return
+        self._t_last_snapshot = now
+        ev = {"stats": self.stats, "uptime_s": now - self._t_started}
+        if self.cfg.metrics:
+            live = {}
+            for pool in self._all_pools():
+                live.update({str(k): v
+                             for k, v in pool.latest_metrics().items()})
+            ev["resident_metrics"] = live
+        self.tel.events.emit("stats_snapshot", **ev)
 
     def run_until_drained(self, max_steps: Optional[int] = None
                           ) -> list[SolveResult]:
@@ -671,6 +745,27 @@ class StreamingSolverService:
             "latency_p50_s": lat.percentile(50),
             "latency_p95_s": lat.percentile(95),
             "latency_max_s": lat.max(),
+            "uptime_s": time.perf_counter() - self._t_started,
+            "tenants": self.slo.summary(),
+        }
+
+    def health(self) -> dict:
+        """Liveness + occupancy view for the ``/healthz`` endpoint
+        (obs.serving.MetricsServer): one row per resident pool plus
+        queue depth — everything a scraper needs to decide the service
+        is alive and how loaded it is."""
+        return {
+            "mode": "streaming",
+            "uptime_s": time.perf_counter() - self._t_started,
+            "waiting": self.waiting,
+            "resident": self.resident,
+            "devices": len(self._devices),
+            "tenants": sorted(self.slo.tenants),
+            "pools": [
+                {"bucket": p.bucket, "device": p.dev_label,
+                 "slots": p.slots, "occupied": p.occupied,
+                 "chunks": p.chunks, "fills": p.fills}
+                for p in self._all_pools()],
         }
 
 
@@ -683,16 +778,21 @@ class TraceItem:
     iterations: int
     seed: int
     priority: int = 0
+    tenant: Optional[str] = None   # observability label (DESIGN.md §14)
 
 
 def make_poisson_trace(num: int, rate: float, min_n: int, max_n: int,
                        seed: int = 0,
-                       iterations: Union[int, Sequence[int]] = 20
+                       iterations: Union[int, Sequence[int]] = 20,
+                       tenants: Optional[Sequence[str]] = None
                        ) -> list[TraceItem]:
     """Poisson arrivals (exponential inter-arrival at ``rate`` req/s) of
     mixed circle/random instances; ``iterations`` may be a sequence of
     budgets cycled deterministically over the arrivals (heterogeneous
-    stragglers are what streaming wins on)."""
+    stragglers are what streaming wins on).  ``tenants`` cycles tenant
+    labels over the arrivals the same way — instances, seeds and budgets
+    are unchanged by the labels, so a multi-tenant replay solves exactly
+    the single-tenant workload (per-tenant SLO parity tests rely on it)."""
     rng = np.random.RandomState(seed)
     t = 0.0
     out = []
@@ -704,7 +804,9 @@ def make_poisson_trace(num: int, rate: float, min_n: int, max_n: int,
         its = (int(iterations) if np.isscalar(iterations)
                else int(iterations[i % len(iterations)]))
         out.append(TraceItem(at=t, instance=inst, iterations=its,
-                             seed=seed + i))
+                             seed=seed + i,
+                             tenant=(tenants[i % len(tenants)]
+                                     if tenants else None)))
     return out
 
 
@@ -728,7 +830,8 @@ def replay_trace(svc: StreamingSolverService, trace: Sequence[TraceItem]
                 break          # queue full: step to drain, then retry
             it = trace[i]
             svc.submit(it.instance, iterations=it.iterations,
-                       seed=it.seed, priority=it.priority)
+                       seed=it.seed, priority=it.priority,
+                       tenant=it.tenant)
             i += 1
         if svc.busy:
             results.extend(svc.step())

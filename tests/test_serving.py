@@ -1,0 +1,309 @@
+"""Serving observability plane tests (repro.obs.serving, DESIGN.md §14).
+
+Three contracts: (1) the labeled-family registry + Prometheus renderer +
+SLO tracker produce correct, parseable exposition; (2) the /metrics
+endpoint serves live state from a background thread without perturbing
+the service; (3) request-scoped correlation — a ≥2-tenant replay yields
+a recoverable span chain per request_id, per-tenant SLO families in the
+Prometheus text, well-formed traces/event logs under the validator, and
+results bitwise identical to the same replay with every serving-plane
+feature switched off (telemetry neutrality extends to the new plane).
+"""
+import dataclasses
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import aco, tsp
+from repro.obs import serving, validate
+from repro.solver import streaming
+from repro.solver.service import SolverService
+
+
+# ------------------------------------------------------- labeled families
+def test_registry_labeled_families():
+    r = obs.Registry()
+    plain = r.counter("reqs")
+    a = r.counter("reqs", tenant="a")
+    b = r.counter("reqs", tenant="b")
+    assert plain is not a and a is not b
+    assert r.counter("reqs", tenant="a") is a       # same labels → same
+    plain.inc()
+    a.inc(2)
+    b.inc(3)
+    snap = r.snapshot()
+    assert snap["counters"]["reqs"] == 1            # unlabeled stays bare
+    assert snap["counters"]['reqs{tenant="a"}'] == 2
+    assert snap["counters"]['reqs{tenant="b"}'] == 3
+    # label order is canonical: kwargs order doesn't mint new children
+    g1 = r.gauge("occ", dev="0", bucket="32")
+    g2 = r.gauge("occ", bucket="32", dev="0")
+    assert g1 is g2
+    fams = list(r.families())
+    assert ("reqs", {"tenant": "a"}, "counter", a) in fams
+    kinds = {k for (_, _, k, _) in fams}
+    assert kinds == {"counter", "gauge"}
+
+
+def test_histogram_percentile_edge_contract():
+    h = obs.Registry().histogram("lat", window=4)
+    assert h.percentile(50) == 0.0                  # empty → 0.0
+    h.observe(7.0)
+    for q in (0, 50, 99, 100):                      # single sample → it
+        assert h.percentile(q) == 7.0
+    assert h.percentile(-5) == 7.0 and h.percentile(500) == 7.0  # clamped
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):             # overflow the window
+        h.observe(v)
+    assert h.count == 6 and h.total == 22.0         # exact aggregates
+    assert h.max() == 7.0                           # vmax survives window
+    assert h.percentile(100) == 5.0                 # window-local p100
+    s = h.summary()
+    assert s["count"] == 6 and s["max"] == 7.0
+
+
+# ------------------------------------------------------------- slo tracker
+def test_slo_tracker_attainment_and_summary():
+    slo = serving.SloTracker(obs.Registry())
+    slo.on_submit("a")
+    slo.on_submit("a")
+    slo.on_submit(None)                             # → "default"
+    slo.on_reject("b")
+    slo.on_admit("a", wait_s=0.1)
+    slo.on_admit("a", wait_s=0.2)
+    slo.on_outcome("a", "completed", latency_s=0.5, deadline=1.0)   # met
+    slo.on_outcome("a", "completed", latency_s=2.0, deadline=1.0)   # late
+    slo.on_outcome("b", "expired_waiting", latency_s=3.0, deadline=2.0)
+    with pytest.raises(ValueError, match="outcome"):
+        slo.on_outcome("a", "vanished", 0.0, None)
+    assert slo.tenants == {"a", "b", "default"}
+    s = slo.summary()
+    assert s["a"]["submitted"] == 2 and s["a"]["admitted"] == 2
+    assert s["a"]["completed"] == 2 and s["a"]["met"] == 1
+    assert s["a"]["attainment"] == pytest.approx(0.5)
+    assert s["b"]["rejected"] == 1 and s["b"]["expired_waiting"] == 1
+    assert s["b"]["attainment"] == 0.0
+    assert s["default"]["submitted"] == 1 and s["default"]["terminated"] == 0
+    assert s["a"]["latency_s"]["count"] == 2
+    assert json.loads(json.dumps(s)) == s
+
+
+# ---------------------------------------------------- prometheus renderer
+def test_render_prometheus_text():
+    r = obs.Registry()
+    r.counter("reqs").inc(4)
+    r.counter("reqs", tenant="a").inc(2)
+    r.gauge("occupancy").set(0.75)
+    h = r.histogram("lat_s", window=8, tenant='we"ird\\')
+    h.observe(1.0)
+    h.observe(3.0)
+    r.gauge("bad name!").set(float("nan"))
+    text = serving.render_prometheus(r)
+    lines = text.splitlines()
+    assert "# TYPE repro_reqs counter" in lines
+    assert lines.count("# TYPE repro_reqs counter") == 1   # one per family
+    assert "repro_reqs 4" in lines
+    assert 'repro_reqs{tenant="a"} 2' in lines
+    assert "# TYPE repro_occupancy gauge" in lines
+    assert "repro_occupancy 0.75" in lines
+    # histograms expose quantiles + _sum/_count/_max; labels escaped and
+    # canonically sorted (quantile < tenant)
+    esc = 'tenant="we\\"ird\\\\"'
+    assert f'repro_lat_s{{quantile="0.5",{esc}}} 2.0' in lines
+    assert f"repro_lat_s_sum{{{esc}}} 4.0" in lines
+    assert f"repro_lat_s_count{{{esc}}} 2" in lines
+    assert f"repro_lat_s_max{{{esc}}} 3.0" in lines
+    assert "repro_bad_name_ NaN" in lines                  # sanitized name
+    assert text.endswith("\n")
+
+
+# ------------------------------------------------------- metrics endpoint
+def _get(url: str):
+    with urllib.request.urlopen(url, timeout=5.0) as resp:
+        return resp.status, resp.headers.get("Content-Type"), resp.read()
+
+
+def test_metrics_server_endpoints():
+    cfg = aco.ACOConfig(iterations=3)
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16)
+    server = obs.MetricsServer(
+        svc.tel, health_fn=svc.health,
+        snapshot_extra_fn=lambda: {"stats": svc.stats}, port=0)
+    try:
+        assert server.port > 0                      # ephemeral port bound
+        svc.submit(tsp.random_instance(10, seed=0), tenant="acme")
+        svc.run_until_drained()
+
+        status, ctype, body = _get(server.url("/metrics"))
+        text = body.decode()
+        assert status == 200 and ctype.startswith("text/plain")
+        assert "0.0.4" in ctype                     # exposition version
+        assert 'repro_slo_completed{tenant="acme"} 1' in text
+        assert 'repro_slo_attainment{tenant="acme"} 1.0' in text
+
+        status, ctype, body = _get(server.url("/healthz"))
+        health = json.loads(body)
+        assert status == 200 and ctype.startswith("application/json")
+        assert health["ok"] is True and health["uptime_s"] >= 0
+        assert health["mode"] == "streaming"
+        assert "acme" in health["tenants"]
+
+        status, _, body = _get(server.url("/snapshot"))
+        snap = json.loads(body)
+        assert status == 200 and snap["schema"] == "repro.obs/v1"
+        assert snap["stats"]["completed"] == 1
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(server.url("/nope"))
+        assert ei.value.code == 404
+    finally:
+        server.close()
+        svc.tel.close()
+    server.close()                                  # close is idempotent
+
+
+def test_drain_service_health_and_slo():
+    svc = SolverService(aco.ACOConfig(iterations=3), max_batch=2)
+    for i, t in enumerate(("x", None, "x")):
+        svc.submit(tsp.random_instance(10 + i, seed=i), tenant=t)
+    res = svc.run()
+    assert len(res) == 3
+    assert {r.tenant for r in res} == {"x", None}
+    assert all(r.trace_id for r in res)
+    h = svc.health()
+    assert h["mode"] == "drain" and h["pending"] == 0
+    s = svc.slo.summary()
+    assert s["x"]["completed"] == 2 and s["x"]["attainment"] == 1.0
+    assert s["default"]["completed"] == 1
+
+
+# --------------------------------------- request correlation, two tenants
+def _replay(tenants, with_endpoint, events_path=None):
+    cfg = aco.ACOConfig(iterations=6, metrics=True)
+    tel = obs.Telemetry(events_path=events_path)
+    svc = streaming.StreamingSolverService(
+        cfg, max_batch=2, min_bucket=16, telemetry=tel,
+        snapshot_every=1e-6)
+    trace = streaming.make_poisson_trace(
+        6, rate=1e9, min_n=10, max_n=14, seed=3,
+        iterations=(4, 7), tenants=tenants)
+    server = obs.MetricsServer(tel, health_fn=svc.health, port=0) \
+        if with_endpoint else None
+    try:
+        res = streaming.replay_trace(svc, trace)
+    finally:
+        prom = _get(server.url("/metrics"))[2].decode() if server else None
+        if server:
+            server.close()
+        tel.close()
+    return svc, sorted(res, key=lambda r: r.request_id), prom
+
+
+def test_two_tenant_replay_correlation_slo_and_parity(tmp_path):
+    ref_svc, ref, _ = _replay(tenants=None, with_endpoint=False)
+    svc, res, prom = _replay(tenants=("t-a", "t-b"), with_endpoint=True,
+                             events_path=str(tmp_path / "events.jsonl"))
+
+    # (a) serving plane is bitwise-neutral: labels + live endpoint change
+    # nothing about the solves
+    assert len(res) == len(ref) == 6
+    for a, b in zip(ref, res):
+        assert a.best_len == b.best_len
+        np.testing.assert_array_equal(a.best_tour, b.best_tour)
+    assert {r.tenant for r in res} == {"t-a", "t-b"}
+
+    # (b) recoverable span chain per request_id: each request shows up as
+    # a queued span, a residency span, and the chunk dispatches it was
+    # resident for — and every span naming its trace_id agrees with it
+    trace = svc.tel.tracer.to_chrome()
+    for r in res:
+        chain = svc.tel.tracer.request_chain(r.request_id)
+        names = [ev["name"] for ev in chain]
+        assert any(n.startswith("queued req") for n in names)
+        assert f"req{r.request_id}" in names
+        assert "chunk_dispatch" in names
+        tids = {ev["args"]["trace_id"] for ev in chain
+                if "trace_id" in ev["args"]}
+        assert tids == {r.trace_id}
+    events = list(svc.tel.events.records())
+    for r in res:
+        kinds = {e["kind"] for e in events
+                 if e.get("request_id") == r.request_id}
+        assert {"submit", "admit", "harvest"} <= kinds
+        for e in events:
+            if e.get("request_id") == r.request_id:
+                assert e["trace_id"] == r.trace_id
+                assert e["tenant"] == r.tenant
+
+    # (c) per-tenant SLO reaches the Prometheus exposition
+    assert 'repro_slo_completed{tenant="t-a"} 3' in prom
+    assert 'repro_slo_completed{tenant="t-b"} 3' in prom
+    assert 'repro_slo_attainment{tenant="t-a"} 1.0' in prom
+    assert "repro_slo_latency_s" in prom
+    st = svc.stats
+    assert set(st["tenants"]) == {"t-a", "t-b"}
+    assert st["uptime_s"] > 0
+
+    # (d) everything emitted validates: chrome trace + event-log mirror
+    assert validate.validate_chrome_trace(trace) == len(trace["traceEvents"])
+    assert validate.validate_event_log_file(
+        str(tmp_path / "events.jsonl")) > 0
+
+
+def test_snapshot_fires_immediately_with_uptime():
+    cfg = aco.ACOConfig(iterations=2)
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                           snapshot_every=3600.0)
+    svc.submit(tsp.random_instance(10, seed=0))
+    svc.run_until_drained()
+    snaps = [e for e in svc.tel.events.records()
+             if e["kind"] == "stats_snapshot"]
+    assert len(snaps) == 1                  # first fires immediately, the
+    assert snaps[0]["uptime_s"] >= 0        # hour-long cadence never hits
+    assert svc.stats["uptime_s"] >= snaps[0]["uptime_s"]
+
+
+def test_expired_waiting_request_has_span_and_slo():
+    cfg = aco.ACOConfig(iterations=2)
+    svc = streaming.StreamingSolverService(cfg, max_batch=1, min_bucket=16)
+    svc.submit(tsp.random_instance(10, seed=0), tenant="slow",
+               deadline=1e-6)
+    import time
+    time.sleep(0.01)
+    res = svc.run_until_drained()
+    assert len(res) == 1 and res[0].expired and res[0].tenant == "slow"
+    s = svc.slo.summary()
+    assert s["slow"]["expired_waiting"] == 1
+    assert s["slow"]["attainment"] == 0.0
+    names = [e["name"] for e in svc.tel.tracer.to_chrome()["traceEvents"]]
+    assert any(n.startswith("queued req") and n.endswith("!")
+               for n in names)             # expired-in-queue span marker
+
+
+# --------------------------------------------------------------- validator
+def test_validator_rejects_malformed():
+    with pytest.raises(validate.TraceValidationError, match="ph"):
+        validate.validate_chrome_trace([{"pid": 1, "tid": 1, "name": "x"}])
+    with pytest.raises(validate.TraceValidationError, match="ts"):
+        validate.validate_chrome_trace(
+            [{"ph": "X", "pid": 1, "tid": 1, "name": "x", "dur": 1}])
+    with pytest.raises(validate.TraceValidationError, match="dur"):
+        validate.validate_chrome_trace(
+            [{"ph": "X", "pid": 1, "tid": 1, "name": "x", "ts": 0,
+              "dur": -5}])
+    ok = [{"ph": "X", "pid": 1, "tid": 1, "name": "x", "ts": 0, "dur": 2}]
+    assert validate.validate_chrome_trace(ok) == 1
+    assert validate.validate_chrome_trace({"traceEvents": ok}) == 1
+
+    with pytest.raises(validate.TraceValidationError, match="kind"):
+        validate.validate_event_log([{"t": 0.0}])
+    with pytest.raises(validate.TraceValidationError, match="request_id"):
+        validate.validate_event_log(
+            [{"t": 0.0, "kind": "harvest", "trace_id": "x", "tenant": "d"}])
+    assert validate.validate_event_log(
+        [json.dumps({"t": 0.0, "kind": "reject"}),
+         {"t": 1.0, "kind": "harvest", "request_id": 0,
+          "trace_id": "ab", "tenant": "default"}]) == 2
