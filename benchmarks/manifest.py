@@ -62,6 +62,10 @@ def _headline_quality(p: dict) -> dict:
         for k in ("iroulette_gap_pct", "gumbel_gap_pct"):
             if k in r:
                 out[f"{r['instance']}_{k}"] = r[k]
+    for r in p.get("quant_rows", []):
+        for k in ("bf16_vs_fp32_pct", "int8_vs_fp32_pct"):
+            if k in r:
+                out[f"{r['instance']}_{k}"] = r[k]
     return out
 
 
@@ -85,6 +89,12 @@ def _headline_sparse(p: dict) -> dict:
     out = {}
     for r in p["rows"]:
         key = f"{r['instance']}_k{r['k']}_{r['construction']}"
+        dt = r.get("tau_dtype", "fp32")
+        if dt != "fp32":                 # quantised residency rows (§15)
+            key = f"{key}_{dt}"
+            out[f"{key}_tau_bytes"] = r.get("resident_tau_bytes")
+            out[f"{key}_tau_fp32_over"] = r.get("tau_fp32_over_quant")
+            continue
         out[f"{key}_dense_over_sparse"] = r.get("dense_over_sparse")
         out[f"{key}_resident_bytes"] = r.get("resident_bytes_sparse")
         out[f"{key}_iters_per_s"] = r.get("iters_per_s")
@@ -96,6 +106,9 @@ def _headline_streaming(p: dict) -> dict:
     for r in p["rows"]:
         out[f"{r['mode']}_ips"] = r["ips"]
         out[f"{r['mode']}_lat_mean_s"] = r["lat_mean_s"]
+    for r in p.get("residency", []):     # quantised slot footprint (§15)
+        out[f"slot_bytes_{r['tau_dtype']}"] = r["state_bytes_per_slot"]
+        out[f"slots_per_gb_{r['tau_dtype']}"] = r["slots_per_gb"]
     return out
 
 

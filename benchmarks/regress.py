@@ -85,11 +85,21 @@ CHECKS = [
     Check("sparse", "*_resident_bytes", "match", rel=0.02),
     Check("sparse", "*_dense_over_sparse", "match", rel=0.05),
     Check("sparse", "*_iters_per_s", "higher", rel=0.7),
+    # quantised resident tau (DESIGN.md §15): byte counts and compression
+    # ratios are deterministic — int8 must hold ~3.9x, bf16 exactly 2x
+    Check("sparse", "*_tau_bytes", "match", rel=0.0),
+    Check("sparse", "*_tau_fp32_over", "match", rel=0.02),
+    Check("streaming", "tau_ratio_bf16", "match", rel=0.0),
+    Check("streaming", "tau_ratio_int8", "match", rel=0.02),
+    Check("streaming", "slot_bytes_*", "match", rel=0.0),
     # construction hot path (BENCH_construction.json)
     Check("construction", "nn_lazy_speedup", "higher", rel=0.35),
     # solution quality (BENCH_quality.json): deterministic seeds, but a
     # gap near 0 needs additive slack, not relative
     Check("quality", "*_gap_pct", "lower", rel=0.05, abs_slack=2.0),
+    # quantised quality gate (DESIGN.md §15): signed drift vs fp32 must
+    # stay within the same absolute band it was committed at
+    Check("quality", "*_vs_fp32_pct", "match", rel=0.0, abs_slack=1.0),
 ]
 
 DEFAULT_BENCHES = ("obs", "streaming")

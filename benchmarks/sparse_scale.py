@@ -24,7 +24,7 @@ import json
 import os
 import time
 
-from repro.core import aco, tsp
+from repro.core import aco, quant, tsp
 from repro.sparse import aco as sparse_aco
 from repro.sparse import store
 
@@ -49,11 +49,12 @@ def get_instance(name: str, n: int) -> tuple[tsp.TSPInstance, str]:
 
 
 def bench_case(name: str, n: int, k: int, construction: str,
-               iters: int = ITERS) -> dict:
+               iters: int = ITERS, tau_dtype: str = "fp32") -> dict:
     inst, source = get_instance(name, n)
     cfg = aco.ACOConfig(variant="mmas", selection="iroulette", sparse=True,
                         sparse_k=k, m=ANTS, iterations=iters, seed=0,
-                        construction=construction, partial_window=WINDOW)
+                        construction=construction, partial_window=WINDOW,
+                        tau_dtype=tau_dtype)
     ewt = inst.edge_weight_type
     t0 = time.perf_counter()
     problem = store.make_sparse_problem(inst, k)
@@ -73,12 +74,16 @@ def bench_case(name: str, n: int, k: int, construction: str,
 
     res = store.resident_bytes(problem, state)
     dense = store.dense_resident_bytes(inst.n)
+    tau_bytes = (quant.tau_nbytes(state.tau)
+                 + quant.tau_nbytes(state.ovf_tau))
     return {
         "instance": inst.name, "source": source, "n": inst.n, "k": k,
         "m": ANTS, "construction": construction, "iters": iters,
+        "tau_dtype": tau_dtype,
         "best_len": round(float(state.best_len), 2),
         "resident_bytes_sparse": res,
         "resident_bytes_dense": dense,
+        "resident_tau_bytes": tau_bytes,
         "dense_over_sparse": round(dense / res, 1),
         "build_s": round(build_s, 2),
         "compile_s": round(compile_s, 2),
@@ -92,10 +97,18 @@ def main(cases=CASES, out_path: str | None = DEFAULT_OUT):
     for name, n, k in cases:
         for construction in ("data_parallel", "partial"):
             rows.append(bench_case(name, n, k, construction))
-    hdr = list(rows[0])
+        # quantised resident tau (DESIGN.md §15): same case through the
+        # data-parallel route per tau_dtype — residency + throughput rows
+        fp32_tau = rows[-2]["resident_tau_bytes"]   # data_parallel row
+        for tau_dtype in ("bf16", "int8"):
+            r = bench_case(name, n, k, "data_parallel", tau_dtype=tau_dtype)
+            r["tau_fp32_over_quant"] = round(
+                fp32_tau / r["resident_tau_bytes"], 2)
+            rows.append(r)
+    hdr = list(rows[-1])
     print(",".join(hdr))
     for r in rows:
-        print(",".join(str(r[c]) for c in hdr))
+        print(",".join(str(r.get(c, "")) for c in hdr))
     if out_path:
         payload = {
             "benchmark": "sparse_scale",

@@ -30,7 +30,7 @@ import time
 
 import numpy as np
 
-from repro.core import aco
+from repro.core import aco, quant, tsp
 from repro.solver import SolverService, StreamingSolverService, engine, \
     streaming
 
@@ -122,6 +122,31 @@ def _row(mode: str, results, wall: float, extra=None) -> dict:
     return row
 
 
+def residency_rows(case) -> list[dict]:
+    """Resident-state footprint of one streaming slot per ``tau_dtype``
+    (DESIGN.md §15).  Deterministic byte counts, no timing: the quantised
+    store's capacity claim is how many resident colonies fit per GB when
+    the (n, n) tau payload drops to bf16/int8 (+ per-row scales)."""
+    bucket = case["bucket"]
+    inst = tsp.random_instance(bucket, seed=0)
+    out, fp32_tau = [], None
+    for tau_dtype in ("fp32", "bf16", "int8"):
+        cfg = aco.ACOConfig(iterations=1, selection="gumbel",
+                            tau_dtype=tau_dtype)
+        st = engine.init_states([inst], cfg, [0], bucket)
+        slot_bytes = quant.tau_nbytes(st)          # sums every state leaf
+        tau_bytes = quant.tau_nbytes(st.tau)
+        fp32_tau = fp32_tau if fp32_tau is not None else tau_bytes
+        out.append({
+            "tau_dtype": tau_dtype, "bucket": bucket,
+            "state_bytes_per_slot": slot_bytes,
+            "tau_bytes_per_slot": tau_bytes,
+            "tau_fp32_over_quant": round(fp32_tau / tau_bytes, 2),
+            "slots_per_gb": int(1e9 // slot_bytes),
+        })
+    return out
+
+
 REPS = 3   # best-of-N replays per mode (min wall) to damp scheduler noise
 
 
@@ -172,19 +197,30 @@ def main(case=CASE, out_path: str | None = None):
     for r in rows:
         print(",".join(str(r.get(k, "")) for k in hdr))
     drain, stream = rows
+    residency = residency_rows(case)
+    res_by_dt = {r["tau_dtype"]: r for r in residency}
     summary = {
         "ips_ratio": round(stream["ips"] / drain["ips"], 3),
         "lat_mean_ratio": round(stream["lat_mean_s"] / drain["lat_mean_s"],
                                 3),
+        "tau_ratio_bf16": res_by_dt["bf16"]["tau_fp32_over_quant"],
+        "tau_ratio_int8": res_by_dt["int8"]["tau_fp32_over_quant"],
     }
     print(f"streaming/drain: {summary['ips_ratio']}x ips, "
           f"{summary['lat_mean_ratio']}x mean latency")
+    for r in residency:
+        print(f"residency[{r['tau_dtype']}]: "
+              f"{r['state_bytes_per_slot']} B/slot "
+              f"(tau {r['tau_bytes_per_slot']} B, "
+              f"{r['tau_fp32_over_quant']}x smaller), "
+              f"{r['slots_per_gb']} slots/GB")
     payload = {
         "benchmark": "streaming_throughput",
         "schema": 1,
         "unix_time": int(time.time()),
         "case": {k: v for k, v in case.items()},
         "rows": rows,
+        "residency": residency,
         "summary": summary,
     }
     with open(out_path, "w") as f:

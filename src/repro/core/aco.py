@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import localsearch, pheromone, strategies, tsp
+from . import localsearch, pheromone, quant, strategies, tsp
 
 Array = jax.Array
 
@@ -54,6 +54,15 @@ class ACOConfig:
     sparse_k: int = 32             # candidate-list width of the sparse pages
     sparse_overflow: int = 4       # off-list adoption slots per city
     partial_window: int = 64       # Partial-ACO rebuild window (construction="partial")
+    # Quantised resident pheromone (core/quant.py, DESIGN.md §15): tau is
+    # held as a low-precision QuantTau payload (+ per-row scales for int8)
+    # and dequantised to a transient fp32 tensor for each step's compute;
+    # the Pallas selection kernels dequantise tile-by-tile instead and
+    # never materialise the fp32 matrix.  "fp32" keeps today's raw Array
+    # leaf — bitwise-identical routes, unchanged pytree structure.
+    tau_dtype: str = "fp32"        # fp32 | bf16 | int8
+    tau_round: str = "stochastic"  # quantise-on-store rounding | "nearest"
+    tau_compensation: bool = False  # carry fp32 error-feedback residual
     # In-jit telemetry (repro.obs, DESIGN.md §13): when True, colony_step /
     # sparse_colony_step additionally return an obs.StepMetrics pytree of
     # per-iteration convergence scalars, and engine.run_batch carries one
@@ -66,7 +75,7 @@ class ACOConfig:
 
 
 class ColonyState(NamedTuple):
-    tau: Array            # (n, n) pheromone
+    tau: "Array | quant.QuantTau"  # (n, n) pheromone (QuantTau if quantised)
     best_tour: Array      # (n,) int32
     best_len: Array       # () float32
     iteration: Array      # () int32
@@ -146,13 +155,26 @@ def initial_tau(instance: tsp.TSPInstance, cfg: ACOConfig,
     return m / c_nn
 
 
+def make_tau(tau_f32: Array, cfg: ACOConfig) -> "Array | quant.QuantTau":
+    """Initial tau in the config's resident representation: raw fp32 (the
+    bitwise-stable default) or a deterministically-rounded QuantTau.  Used
+    by every init path (solo, engine slot stacks, streaming refill
+    surgery) so a refilled slot starts from exactly what a solo quantised
+    run starts from."""
+    if not quant.is_quantised(cfg.tau_dtype):
+        return tau_f32
+    quant.validate_tau_dtype(cfg.tau_dtype, cfg.tau_round)
+    return quant.quantise(tau_f32, cfg.tau_dtype,
+                          compensation=cfg.tau_compensation)
+
+
 def init_colony(instance: tsp.TSPInstance, cfg: ACOConfig,
                 seed: Optional[int] = None) -> ColonyState:
     n = instance.n
     tau0 = initial_tau(instance, cfg)
     key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
     return ColonyState(
-        tau=jnp.full((n, n), tau0, jnp.float32),
+        tau=make_tau(jnp.full((n, n), tau0, jnp.float32), cfg),
         best_tour=jnp.arange(n, dtype=jnp.int32),
         best_len=jnp.asarray(np.float32(np.inf)),
         iteration=jnp.asarray(0, jnp.int32),
@@ -239,18 +261,33 @@ def colony_step(problem: Problem, state: ColonyState,
     m = cfg.num_ants(n)
     n_act = problem.n_actual           # None, or traced () int32 (padded)
     h = problem.hyper                  # None, or traced per-instance Hyper
+    quantised = quant.is_quantised(cfg.tau_dtype)
     if cfg.use_pallas:
         # Masked (padded) instances are kernel-supported; per-instance
         # Hyper operands are not (static kernel exponents) — one typed
         # rejection point for the whole kernel route (DESIGN.md §10).
         from repro.kernels import ops as kops
         kops.check_kernel_route(masked=n_act is not None,
-                                hyper=h is not None)
+                                hyper=h is not None,
+                                tau_dtype=cfg.tau_dtype)
+    elif quantised:
+        # Pure-JAX quantised route still goes through the single rejection
+        # point: quantised x per-instance Hyper is unsupported everywhere.
+        from repro.kernels import ops as kops
+        kops.check_kernel_route(hyper=h is not None, tau_dtype=cfg.tau_dtype)
     alpha = cfg.alpha if h is None else h.alpha
     beta = cfg.beta if h is None else h.beta
     rho = cfg.rho if h is None else h.rho
     q = cfg.q if h is None else h.q
-    key, k_tour = jax.random.split(state.key)
+    if quantised:
+        # One extra split feeds quantise-on-store; the fp32 branch keeps
+        # today's two-way split, so its key trajectory is untouched.
+        key, k_tour, k_q = jax.random.split(state.key, 3)
+    else:
+        key, k_tour = jax.random.split(state.key)
+        k_q = None
+    # Transient fp32 view for this step's compute (identity for fp32).
+    tau_full = quant.dequantise(state.tau) if quantised else state.tau
 
     method = cfg.construction
     if cfg.use_pallas and method == "data_parallel":
@@ -259,17 +296,25 @@ def colony_step(problem: Problem, state: ColonyState,
         # precompute on this route at all.
         method = "fused"
 
+    tau_c, tau_scale = tau_full, None
     if method == "fused":
         choice_info = jnp.zeros((1, 1), jnp.float32)   # unused by the step
+        if quantised:
+            # The fused kernel dequantises tile-by-tile in its epilogue:
+            # hand it the resident payload (+ per-row scales for int8)
+            # instead of a materialised fp32 matrix.
+            tau_c = state.tau.q
+            tau_scale = state.tau.scale if cfg.tau_dtype == "int8" else None
     else:
-        choice_info = _choice(state.tau, problem.eta, cfg, alpha, beta,
+        choice_info = _choice(tau_full, problem.eta, cfg, alpha, beta,
                               n_act)
 
     res = strategies.construct_tours(
         k_tour, problem.dist, choice_info, m,
         method=method, selection=cfg.selection,
-        nn=problem.nn, tau=state.tau, eta=problem.eta,
+        nn=problem.nn, tau=tau_c, eta=problem.eta,
         alpha=alpha, beta=beta, n_actual=n_act,
+        tau_scale=tau_scale,
     )
 
     pre_ls_lengths = None
@@ -305,10 +350,10 @@ def colony_step(problem: Problem, state: ColonyState,
 
     if cfg.use_pallas:
         from repro.kernels import ops as kops
-        tau = kops.pheromone_update(state.tau, dep_tours, dep_w, rho,
+        tau = kops.pheromone_update(tau_full, dep_tours, dep_w, rho,
                                     n_actual=n_act)
     else:
-        tau = pheromone.update(state.tau, dep_tours, dep_w, rho,
+        tau = pheromone.update(tau_full, dep_tours, dep_w, rho,
                                strategy=cfg.deposit, tile=cfg.deposit_tile,
                                n_actual=n_act)
 
@@ -333,7 +378,16 @@ def colony_step(problem: Problem, state: ColonyState,
         tau = pheromone.local_update_acs(tau, f.ravel(), t.ravel(), cfg.xi,
                                          tau0, w=ew)
 
-    new_state = ColonyState(tau, best_tour, best_len,
+    # Quantise-on-store (quant.py): the fp32 result of this step's update
+    # becomes the next resident payload; metrics below read the exact fp32
+    # tau this step computed, before the store rounds it.
+    tau_store = tau
+    if quantised:
+        tau_store = quant.requantise(
+            tau, state.tau, cfg.tau_dtype,
+            quant.round_key(cfg.tau_round, k_q))
+
+    new_state = ColonyState(tau_store, best_tour, best_len,
                             state.iteration + 1, key)
     if not cfg.metrics:
         return new_state, it_best_len

@@ -36,7 +36,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import aco, pheromone, strategies, tsp
+from . import aco, pheromone, quant, strategies, tsp
 
 Array = jax.Array
 
@@ -115,6 +115,14 @@ def run_islands(instance: tsp.TSPInstance, cfg: IslandConfig, mesh: Mesh,
     sharded-colony path below). Returns the stacked island states; global
     best = argmin over the island axis.
     """
+    if quant.is_quantised(cfg.aco.tau_dtype):
+        from repro.kernels import ops as kops
+        raise kops.UnsupportedKernelRoute(
+            "the island model cannot run over a quantised pheromone store "
+            f"(tau_dtype={cfg.aco.tau_dtype!r}): immigrant deposits and "
+            "pmean trail mixing operate on raw fp32 tau leaves. Run "
+            "tau_dtype='fp32' for islands, or use the engine/streaming "
+            "routes for quantised colonies.")
     n_islands = int(np.prod([mesh.shape[a] for a in island_axes]))
     if state is None:
         state = init_island_states(instance, cfg, n_islands)
@@ -313,6 +321,12 @@ def run_sharded_colony(instance: tsp.TSPInstance, cfg: aco.ACOConfig,
                        iterations: Optional[int] = None,
                        state: Optional[ShardedColonyState] = None
                        ) -> ShardedColonyState:
+    if quant.is_quantised(cfg.tau_dtype):
+        from repro.kernels import ops as kops
+        raise kops.UnsupportedKernelRoute(
+            "the city-sharded colony cannot run over a quantised pheromone "
+            f"store (tau_dtype={cfg.tau_dtype!r}): tau column slabs are raw "
+            "fp32 per-device shards. Run tau_dtype='fp32' on this route.")
     n = instance.n
     d = jnp.asarray(instance.distances())
     eta = tsp.heuristic_matrix(d)

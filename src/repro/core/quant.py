@@ -1,0 +1,175 @@
+"""Quantised resident pheromone store (DESIGN.md §15).
+
+The pheromone matrix is the one large *resident* tensor the solver fabric
+carries per colony — smooth, bounded (MMAS clamps it explicitly), and
+noise-tolerant, exactly the profile that tolerates reduced precision.
+This module packages tau as a ``QuantTau`` pytree so every layer that
+*holds* tau (engine slot stacks, streaming pools, sharded placement,
+checkpoints, sparse pages) keeps the low-precision payload resident,
+while every layer that *computes* on tau (evaporate/deposit/clamp/ACS)
+dequantises to a transient fp32 tensor, updates, and requantises on
+store.
+
+Representation per ``ACOConfig.tau_dtype``:
+
+- ``fp32``  — no wrapper at all: ColonyState.tau stays the raw float32
+  array, the pytree structure is unchanged, and every fp32 route is
+  bitwise-identical to the unquantised tree (the load-bearing exactness
+  contracts of PRs 2-6 are untouched).
+- ``bf16``  — payload ``q`` is tau cast to bfloat16 (same exponent range
+  as fp32, so no scale is needed; ``scale``/``err`` are zero-width
+  leaves and cost 0 resident bytes).  Dequant is exactly ``astype(f32)``.
+- ``int8``  — payload ``q`` is int8 with a per-row fp32 ``scale``
+  (``max(|row|)/127``, optim.compression.quantize_int8(axis=-1)).
+  Per-row granularity matters: MMAS rows saturate at very different
+  levels and a per-tensor scale would crush cold rows to zero.
+
+Rounding (``ACOConfig.tau_round``): ``stochastic`` (default) rounds with
+``floor(y + uniform)`` — unbiased, so trail values below half a
+quantisation step (int8 cannot represent the full MMAS tau_max/tau_min =
+2n ratio for n >= 64) survive in expectation instead of deterministically
+collapsing to the floor; ``nearest`` is deterministic round-to-nearest.
+
+Compensation (``ACOConfig.tau_compensation``): carry the fp32
+quantisation residual in ``err`` and add it back before the next
+requantise — the error-feedback invariant of optim/compression.py
+(``q*scale + err == the exact accumulated fp32 value``), which makes
+repeated deposits exact in the limit.  Off by default: the residual is a
+full-size fp32 leaf, which forfeits the resident-bytes win (int8+err is
+5 bytes/entry); stochastic rounding gives the unbiasedness cheaply.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import quantize_int8
+
+Array = jax.Array
+
+TAU_DTYPES = ("fp32", "bf16", "int8")
+TAU_ROUNDS = ("stochastic", "nearest")
+
+
+class QuantTau(NamedTuple):
+    """Quantised pheromone leaf bundle; rides anywhere a tau Array did.
+
+    All three leaves always exist so the pytree structure is static per
+    config: unused leaves (bf16 scale, compensation-off err) are
+    zero-width ``(rows, 0)`` arrays — 0 resident bytes, and every generic
+    pytree operation in the fabric (stack / .at[ix].set / where-merge /
+    pad / shard / checkpoint) handles them untouched.
+    """
+    q: Array        # payload: int8 or bfloat16, same shape as the fp32 tau
+    scale: Array    # (rows, 1) f32 per-row scale (int8), or (rows, 0)
+    err: Array      # f32 error-feedback residual (compensation), or (rows, 0)
+
+
+TauLike = Union[Array, QuantTau]
+
+
+def validate_tau_dtype(tau_dtype: str, tau_round: str = "stochastic") -> None:
+    if tau_dtype not in TAU_DTYPES:
+        raise ValueError(
+            f"unknown tau_dtype {tau_dtype!r}; supported: "
+            + " | ".join(TAU_DTYPES))
+    if tau_round not in TAU_ROUNDS:
+        raise ValueError(
+            f"unknown tau_round {tau_round!r}; supported: "
+            + " | ".join(TAU_ROUNDS))
+
+
+def is_quantised(tau_dtype: str) -> bool:
+    validate_tau_dtype(tau_dtype)
+    return tau_dtype != "fp32"
+
+
+def _zero_width(x: Array) -> Array:
+    return jnp.zeros(x.shape[:-1] + (0,), jnp.float32)
+
+
+def _round_bf16(x: Array, key: Optional[Array]) -> Array:
+    """fp32 -> bf16 cast; stochastic when a key is given.
+
+    Stochastic bf16 rounding adds uniform bits below the truncation point
+    of the fp32 significand and truncates: P(round up) equals the
+    fractional distance to the next representable bf16, i.e. unbiased.
+    A mantissa carry that overflows into the exponent *is* the correct
+    round-up to the next binade.
+    """
+    if key is None:
+        return x.astype(jnp.bfloat16)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    r = jax.random.bits(key, x.shape, jnp.uint32) & jnp.uint32(0xFFFF)
+    bits = (bits + r) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32).astype(jnp.bfloat16)
+
+
+def quantise(x: Array, tau_dtype: str, *, compensation: bool = False,
+             key: Optional[Array] = None,
+             err: Optional[Array] = None) -> QuantTau:
+    """fp32 tau -> QuantTau.  ``err`` carries the previous residual
+    (error feedback); ``key`` switches to stochastic rounding."""
+    validate_tau_dtype(tau_dtype)
+    assert tau_dtype != "fp32", "fp32 tau is stored raw, not wrapped"
+    if x.shape[-1] == 0:
+        # zero-width store (e.g. sparse_overflow=0 pages): no values to
+        # round, but keep the same leaf structure/dtypes as the non-empty
+        # case so the pytree stays static per config.
+        q = x.astype(jnp.bfloat16 if tau_dtype == "bf16" else jnp.int8)
+        scale = (jnp.ones(x.shape[:-1] + (1,), jnp.float32)
+                 if tau_dtype == "int8" else _zero_width(x))
+        return QuantTau(q=q, scale=scale, err=_zero_width(x))
+    work = x if err is None or err.shape[-1] == 0 else x + err
+    if tau_dtype == "bf16":
+        q = _round_bf16(work, key)
+        scale = _zero_width(x)
+        deq = q.astype(jnp.float32)
+    else:
+        q, scale = quantize_int8(work, key=key, axis=-1)
+        deq = q.astype(jnp.float32) * scale
+    new_err = (work - deq) if compensation else _zero_width(x)
+    return QuantTau(q=q, scale=scale, err=new_err)
+
+
+def requantise(x: Array, prev: QuantTau, tau_dtype: str,
+               key: Optional[Array] = None) -> QuantTau:
+    """Quantise-on-store after an fp32 update step, carrying the previous
+    compensation residual (its width — 0 or full — is the static flag)."""
+    comp = prev.err.shape[-1] > 0
+    return quantise(x, tau_dtype, compensation=comp, key=key, err=prev.err)
+
+
+def dequantise(tau: TauLike) -> Array:
+    """Any tau representation -> transient fp32 (identity for raw fp32)."""
+    if not isinstance(tau, QuantTau):
+        return tau
+    if tau.q.dtype == jnp.int8:
+        return tau.q.astype(jnp.float32) * tau.scale
+    return tau.q.astype(jnp.float32)
+
+
+def dequantise_rows(rows: Array, scale_rows: Optional[Array]) -> Array:
+    """Dequantise already-gathered payload rows: the sparse pure route
+    gathers (m, K) pages first and dequantises the transient — the
+    resident (n, k) store never materialises in fp32."""
+    if rows.dtype == jnp.int8:
+        return rows.astype(jnp.float32) * scale_rows
+    if rows.dtype == jnp.bfloat16:
+        return rows.astype(jnp.float32)
+    return rows
+
+
+def tau_nbytes(tau: TauLike) -> int:
+    """Resident bytes of one tau representation (payload + scales + err)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tau))
+
+
+def round_key(tau_round: str, key: Array) -> Optional[Array]:
+    """The PRNG key the quantise-on-store step consumes, or None for
+    deterministic nearest rounding (the key is still split off by the
+    caller either way, so switching rounding modes never shifts the
+    construction key trajectory)."""
+    return key if tau_round == "stochastic" else None

@@ -185,9 +185,16 @@ def _make_fused_step(selector: str, alpha: float, beta: float) -> StepImpl:
         from repro.kernels import ops as kops
         u = jax.random.uniform(key, st.visited.shape, jnp.float32,
                                minval=1e-6, maxval=1.0)
+        # Quantised tau (core/quant.py): extras["tau"] carries the resident
+        # int8/bf16 payload and the kernel dequantises per tile.  The
+        # payload dtype is static at trace time, so passing the per-row
+        # scale only for int8 adds no new jit keys.
+        scale = (extras["tau_scale"]
+                 if extras["tau"].dtype == jnp.int8 else None)
         return kops.fused_select(extras["tau"], extras["eta"], st.cur,
                                  st.visited, u, alpha, beta,
-                                 extras["n_actual"], selector)
+                                 extras["n_actual"], selector,
+                                 tau_scale=scale)
 
     return step
 
@@ -252,6 +259,7 @@ def construct_tours(
     beta: float = 2.0,
     step_impl: Optional[StepImpl] = None,
     n_actual: Optional[Array] = None,
+    tau_scale: Optional[Array] = None,
 ) -> TourResult:
     """Build m complete tours under the given strategy.
 
@@ -277,6 +285,7 @@ def construct_tours(
     zero = jnp.zeros((1, 1), jnp.float32)
     extras = {
         "tau": tau if tau is not None else zero,
+        "tau_scale": tau_scale if tau_scale is not None else zero,
         "eta": eta if eta is not None else zero,
         "alpha": jnp.float32(alpha),
         "beta": jnp.float32(beta),

@@ -43,17 +43,41 @@ DEFAULT_BLOCK_M = 8
 DEFAULT_BLOCK_N = 512
 
 
-def _fused_kernel(tau_ref, eta_ref, cur_ref, vis_ref, rand_ref, nact_ref,
-                  val_ref, idx_ref, *, mode: str, alpha: float, beta: float,
-                  block_n: int, n_rows: int):
+def _fused_kernel(*refs, mode: str, alpha: float, beta: float,
+                  block_n: int, n_rows: int, quant: str):
+    # Quantised tau (core/quant.py): the tile arrives as the resident
+    # int8/bf16 payload and is dequantised here, in-register, per tile —
+    # the fp32 (n, n) matrix never exists.  ``quant`` is a static kernel
+    # parameter; "none" is byte-for-byte today's fp32 body.
+    if quant == "int8":
+        (tau_ref, scale_ref, eta_ref, cur_ref, vis_ref, rand_ref, nact_ref,
+         val_ref, idx_ref) = refs
+    else:
+        (tau_ref, eta_ref, cur_ref, vis_ref, rand_ref, nact_ref,
+         val_ref, idx_ref) = refs
     j = pl.program_id(1)
     cur = cur_ref[...]                                        # (bm,)
     rows_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_rows), 1)
     onehot = (cur[:, None] == rows_iota).astype(jnp.float32)  # (bm, n)
     # Exact gather of the (bm, bn) tau/eta row tiles as an MXU matmul.
+    tau_tile = tau_ref[...]
+    if quant != "none":
+        # int8 in [-127, 127] and bf16 are exactly representable in f32,
+        # so the one-hot contraction below stays bitwise a gather.
+        tau_tile = tau_tile.astype(jnp.float32)
     tau_rows = jax.lax.dot_general(
-        onehot, tau_ref[...], (((1,), (0,)), ((), ())),
+        onehot, tau_tile, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+    if quant == "int8":
+        # Gather the per-row scale with the same one-hot contraction and
+        # multiply after the payload gather: scale is constant along the
+        # row, so (gathered q) * (gathered scale) multiplies exactly the
+        # operands full dequantise-then-gather would — bitwise equal to
+        # the ref.py oracle on the dequantised matrix.
+        srow = jax.lax.dot_general(
+            onehot, scale_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bm, 1)
+        tau_rows = tau_rows * srow
     eta_rows = jax.lax.dot_general(
         onehot, eta_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -93,6 +117,7 @@ def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
                  alpha: float = 1.0, beta: float = 2.0,
                  n_actual: jax.Array | None = None,
                  mode: str = "iroulette",
+                 tau_scale: jax.Array | None = None,
                  block_m: int = DEFAULT_BLOCK_M,
                  block_n: int = DEFAULT_BLOCK_N,
                  interpret: bool = True) -> jax.Array:
@@ -102,7 +127,20 @@ def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
     tail of a padded instance) are never selected.  City padding added here
     for non-divisible tiles is masked the same way, so any block size gives
     the same selection; ant padding is sliced off.
+
+    Quantised tau (core/quant.py): an int8 or bf16 ``tau`` routes the
+    payload into the kernel untouched and dequantises per tile in the
+    epilogue; ``tau_scale`` is the (n, 1) f32 per-row scale, required for
+    int8 and ignored otherwise.
     """
+    if tau.dtype == jnp.int8:
+        q_mode = "int8"
+        assert tau_scale is not None, "int8 tau needs its per-row scale"
+    elif tau.dtype == jnp.bfloat16:
+        q_mode = "bf16"
+    else:
+        q_mode = "none"
+        tau = tau.astype(jnp.float32)
     m, n = visited.shape
     bm = min(block_m, max(m, 1))
     bn = min(block_n, n)
@@ -122,18 +160,25 @@ def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
                         jnp.int32).reshape(1, 1)
     mp, np_ = visited.shape
     gm, gn = mp // bm, np_ // bn
+    in_specs = [
+        pl.BlockSpec((n, bn), lambda i, j: (0, j)),    # tau column tile
+        pl.BlockSpec((n, bn), lambda i, j: (0, j)),    # eta column tile
+        pl.BlockSpec((bm,), lambda i, j: (i,)),        # cur
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # visited
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # rand
+        pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # n_actual
+    ]
+    operands = [tau, eta.astype(jnp.float32), cur.astype(jnp.int32),
+                visited, rand.astype(jnp.float32), n_act]
+    if q_mode == "int8":
+        in_specs.insert(1, pl.BlockSpec((n, 1), lambda i, j: (0, 0)))
+        operands.insert(1, tau_scale.astype(jnp.float32))
     val, idx = pl.pallas_call(
         functools.partial(_fused_kernel, mode=mode, alpha=float(alpha),
-                          beta=float(beta), block_n=bn, n_rows=n),
+                          beta=float(beta), block_n=bn, n_rows=n,
+                          quant=q_mode),
         grid=(gm, gn),
-        in_specs=[
-            pl.BlockSpec((n, bn), lambda i, j: (0, j)),    # tau column tile
-            pl.BlockSpec((n, bn), lambda i, j: (0, j)),    # eta column tile
-            pl.BlockSpec((bm,), lambda i, j: (i,)),        # cur
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # visited
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # rand
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # n_actual
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bm,), lambda i, j: (i,)),
             pl.BlockSpec((bm,), lambda i, j: (i,)),
@@ -143,7 +188,6 @@ def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
             jax.ShapeDtypeStruct((mp,), jnp.int32),
         ],
         interpret=interpret,
-    )(tau.astype(jnp.float32), eta.astype(jnp.float32),
-      cur.astype(jnp.int32), visited, rand.astype(jnp.float32), n_act)
+    )(*operands)
     del val
     return idx[:m]

@@ -45,7 +45,8 @@ def check_kernel_route(masked: bool = False, hyper: bool = False,
                        local_search: Optional[str] = None,
                        construction: Optional[str] = None,
                        streaming: bool = False,
-                       mesh: bool = False) -> None:
+                       mesh: bool = False,
+                       tau_dtype: str = "fp32") -> None:
     """Validate that the kernel/sparse route supports this problem shape.
 
     The single typed rejection point (DESIGN.md §10/§12 support matrix):
@@ -64,8 +65,23 @@ def check_kernel_route(masked: bool = False, hyper: bool = False,
     - sparse x local search: 2-opt/Or-opt evaluate arbitrary (i, j) edges
       against the dense distance matrix;
     - sparse x streaming / mesh sharding: not wired yet (the batched
-      sparse engine route is; see DESIGN.md §12 route matrix).
+      sparse engine route is; see DESIGN.md §12 route matrix);
+    - quantised tau (``tau_dtype`` bf16/int8, DESIGN.md §15): supported on
+      the dense pure-JAX, Pallas, sparse, streaming, sharded and
+      checkpoint routes — but *not* with per-instance ``Hyper`` operands
+      (quality-gap guarantees are audited per static config; mixing
+      per-slot tuning profiles over a lossy store is unvalidated).
     """
+    if tau_dtype not in ("fp32", "bf16", "int8"):
+        raise UnsupportedKernelRoute(
+            f"unknown tau_dtype {tau_dtype!r}: the quantised pheromone "
+            "store supports 'fp32' | 'bf16' | 'int8' (core/quant.py).")
+    if hyper and tau_dtype != "fp32":
+        raise UnsupportedKernelRoute(
+            f"per-instance Hyper operands cannot run over a quantised "
+            f"pheromone store (tau_dtype={tau_dtype!r}): the quantised "
+            "quality gates are validated per static config only. Drop "
+            "Problem.hyper or run tau_dtype='fp32'.")
     if hyper:
         if sparse:
             raise UnsupportedKernelRoute(
@@ -137,24 +153,33 @@ def fused_select(tau: jax.Array, eta: jax.Array, cur: jax.Array,
                  visited: jax.Array, rand: jax.Array,
                  alpha: float = 1.0, beta: float = 2.0,
                  n_actual: Optional[jax.Array] = None,
-                 mode: str = "iroulette") -> jax.Array:
+                 mode: str = "iroulette",
+                 tau_scale: Optional[jax.Array] = None) -> jax.Array:
     """Fused construction step: row gather + tau^a*eta^b + mask + select,
-    without materialising the (m, n) weight matrix (kernels/fused_select)."""
+    without materialising the (m, n) weight matrix (kernels/fused_select).
+    int8/bf16 ``tau`` payloads dequantise per tile in the kernel epilogue;
+    ``tau_scale`` is the int8 per-row scale (core/quant.py)."""
     return _fs.fused_select(tau, eta, cur, visited, rand, alpha, beta,
-                            n_actual, mode, interpret=INTERPRET)
+                            n_actual, mode, tau_scale=tau_scale,
+                            interpret=INTERPRET)
 
 
 def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
                   cand: jax.Array, visited: jax.Array, rand: jax.Array,
                   alpha: float = 1.0, beta: float = 2.0,
-                  mode: str = "iroulette") -> tuple[jax.Array, jax.Array]:
+                  mode: str = "iroulette",
+                  tau_scale: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, jax.Array]:
     """Sparse candidate-page selection: gather visited/rand at the K
     candidate cities, weight tau^a * eta^b, mask, select — one kernel,
     no (m, n) weight tensor (kernels/sparse_select).  Returns (pos, have):
     the winning page position and whether a selectable candidate exists
-    (the sparse construction step's nearest-unvisited fallback trigger)."""
+    (the sparse construction step's nearest-unvisited fallback trigger).
+    int8/bf16 page payloads dequantise in the kernel epilogue; ``tau_scale``
+    is the int8 (m, K) broadcast scale (core/quant.py)."""
     return _ss.sparse_select(tau_rows, eta_rows, cand, visited, rand,
-                             alpha, beta, mode, interpret=INTERPRET)
+                             alpha, beta, mode, tau_scale=tau_scale,
+                             interpret=INTERPRET)
 
 
 def tour_select_step(selection: str = "iroulette"):

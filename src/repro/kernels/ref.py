@@ -88,6 +88,47 @@ def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
     return pos, have
 
 
+def dequant_tau(q: jax.Array, scale: jax.Array | None = None) -> jax.Array:
+    """Reference dequantise for quantised tau payloads (core/quant.py):
+    int8 -> f32 * per-row scale, bf16 -> f32 cast, f32 passthrough.  The
+    quant oracles below dequantise the *whole* operand first and delegate
+    to the fp32 oracles — the kernels' tile-local dequant epilogues must
+    be bitwise equal to this (per-row scales are constant along the
+    gathered axis, so gather/dequant order cannot change the operands of
+    any multiply)."""
+    if q.dtype == jnp.int8:
+        return q.astype(jnp.float32) * scale
+    if q.dtype == jnp.bfloat16:
+        return q.astype(jnp.float32)
+    return q
+
+
+def fused_select_quant(tau_q: jax.Array, tau_scale: jax.Array | None,
+                       eta: jax.Array, cur: jax.Array,
+                       visited: jax.Array, rand: jax.Array,
+                       alpha: float = 1.0, beta: float = 2.0,
+                       n_actual: jax.Array | None = None,
+                       mode: str = "iroulette") -> jax.Array:
+    """Oracle for the quantised fused kernel route: full dequantise, then
+    the fp32 fused_select oracle."""
+    return fused_select(dequant_tau(tau_q, tau_scale), eta, cur, visited,
+                        rand, alpha, beta, n_actual, mode)
+
+
+def sparse_select_quant(tau_rows_q: jax.Array,
+                        scale_rows: jax.Array | None,
+                        eta_rows: jax.Array, cand: jax.Array,
+                        visited: jax.Array, rand: jax.Array,
+                        alpha: float = 1.0, beta: float = 2.0,
+                        mode: str = "iroulette"
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the quantised sparse-page kernel route: dequantise the
+    (m, K) page payload (scale_rows already broadcast to page width), then
+    the fp32 sparse_select oracle."""
+    return sparse_select(dequant_tau(tau_rows_q, scale_rows), eta_rows,
+                         cand, visited, rand, alpha, beta, mode)
+
+
 def select_move(delta: jax.Array, valid: jax.Array, thr: float = 0.0,
                 mode: str = "best") -> tuple[jax.Array, jax.Array]:
     """Local-search move selection over an (m, M) move-delta tensor.

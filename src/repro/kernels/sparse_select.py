@@ -37,9 +37,18 @@ DEFAULT_BLOCK_M = 8
 DEFAULT_BLOCK_N = 512
 
 
-def _sparse_kernel(tau_ref, eta_ref, cand_ref, vis_ref, rand_ref,
-                   pos_ref, have_ref, av_ref, ar_ref, *, mode: str,
-                   alpha: float, beta: float, block_n: int, n_tiles: int):
+def _sparse_kernel(*refs, mode: str, alpha: float, beta: float,
+                   block_n: int, n_tiles: int, quant: str):
+    # Quantised pages (core/quant.py): tau_ref holds the resident int8/bf16
+    # payload; int8 adds a (bm, K) per-row scale operand (the caller
+    # broadcasts the page-row scales to page width).  Dequant runs once, in
+    # the final-tile epilogue, in-register.  "none" is today's fp32 body.
+    if quant == "int8":
+        (tau_ref, scale_ref, eta_ref, cand_ref, vis_ref, rand_ref,
+         pos_ref, have_ref, av_ref, ar_ref) = refs
+    else:
+        (tau_ref, eta_ref, cand_ref, vis_ref, rand_ref,
+         pos_ref, have_ref, av_ref, ar_ref) = refs
     j = pl.program_id(1)
     cand = cand_ref[...]                                      # (bm, K)
     cols = j * block_n + jax.lax.broadcasted_iota(
@@ -67,7 +76,14 @@ def _sparse_kernel(tau_ref, eta_ref, cand_ref, vis_ref, rand_ref,
 
     @pl.when(j == n_tiles - 1)
     def _select():
-        w = _ipow(tau_ref[...], alpha) * _ipow(eta_ref[...], beta)
+        tau_p = tau_ref[...]
+        if quant == "int8":
+            # exact dequant: int8 values are exactly representable in f32,
+            # and the scale operand is the same f32 the oracle multiplies.
+            tau_p = tau_p.astype(jnp.float32) * scale_ref[...]
+        elif quant == "bf16":
+            tau_p = tau_p.astype(jnp.float32)
+        w = _ipow(tau_p, alpha) * _ipow(eta_ref[...], beta)
         mask = (av_ref[...] == 0).astype(w.dtype)
         v = _transform(w, mask, ar_ref[...], mode)
         pos_ref[...] = jnp.argmax(v, axis=1).astype(jnp.int32)
@@ -83,6 +99,7 @@ def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
                   cand: jax.Array, visited: jax.Array, rand: jax.Array,
                   alpha: float = 1.0, beta: float = 2.0,
                   mode: str = "iroulette",
+                  tau_scale: jax.Array | None = None,
                   block_m: int = DEFAULT_BLOCK_M,
                   block_n: int = DEFAULT_BLOCK_N,
                   interpret: bool = True) -> tuple[jax.Array, jax.Array]:
@@ -92,7 +109,21 @@ def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
     Returns (pos (m,) i32 — page position of the selected candidate,
     have (m,) i32 — 1 iff any unvisited positive-weight candidate exists;
     pos is only meaningful where have is 1).
+
+    Quantised pages (core/quant.py): int8/bf16 ``tau_rows`` are
+    dequantised in the kernel's final-tile epilogue; ``tau_scale`` is the
+    (m, K) f32 scale (page-row scales broadcast to page width — candidate
+    and overflow columns carry their own store's scale), required for int8
+    and ignored otherwise.
     """
+    if tau_rows.dtype == jnp.int8:
+        q_mode = "int8"
+        assert tau_scale is not None, "int8 tau pages need their scales"
+    elif tau_rows.dtype == jnp.bfloat16:
+        q_mode = "bf16"
+    else:
+        q_mode = "none"
+        tau_rows = tau_rows.astype(jnp.float32)
     m, kk = cand.shape
     n = visited.shape[1]
     bm = min(block_m, max(m, 1))
@@ -106,22 +137,31 @@ def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
         cand = jnp.pad(cand, ((0, pad_m), (0, 0)), constant_values=-1)
         visited = jnp.pad(visited, ((0, pad_m), (0, 0)), constant_values=1)
         rand = jnp.pad(rand, ((0, pad_m), (0, 0)))
+        if q_mode == "int8":
+            tau_scale = jnp.pad(tau_scale, ((0, pad_m), (0, 0)))
     if pad_n:
         visited = jnp.pad(visited, ((0, 0), (0, pad_n)), constant_values=1)
         rand = jnp.pad(rand, ((0, 0), (0, pad_n)))
     mp, np_ = visited.shape
     gm, gn = mp // bm, np_ // bn
+    in_specs = [
+        pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),   # tau page
+        pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),   # eta page
+        pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),   # candidate ids
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # visited
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # rand
+    ]
+    operands = [tau_rows, eta_rows.astype(jnp.float32),
+                cand.astype(jnp.int32), visited, rand.astype(jnp.float32)]
+    if q_mode == "int8":
+        in_specs.insert(1, pl.BlockSpec((bm, kk), lambda i, j: (i, 0)))
+        operands.insert(1, tau_scale.astype(jnp.float32))
     pos, have, _, _ = pl.pallas_call(
         functools.partial(_sparse_kernel, mode=mode, alpha=float(alpha),
-                          beta=float(beta), block_n=bn, n_tiles=gn),
+                          beta=float(beta), block_n=bn, n_tiles=gn,
+                          quant=q_mode),
         grid=(gm, gn),
-        in_specs=[
-            pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),   # tau page
-            pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),   # eta page
-            pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),   # candidate ids
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # visited
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),   # rand
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bm,), lambda i, j: (i,)),        # pos
             pl.BlockSpec((bm,), lambda i, j: (i,)),        # have
@@ -135,6 +175,5 @@ def sparse_select(tau_rows: jax.Array, eta_rows: jax.Array,
             jax.ShapeDtypeStruct((mp, kk), jnp.float32),
         ],
         interpret=interpret,
-    )(tau_rows.astype(jnp.float32), eta_rows.astype(jnp.float32),
-      cand.astype(jnp.int32), visited, rand.astype(jnp.float32))
+    )(*operands)
     return pos[:m], have[:m]

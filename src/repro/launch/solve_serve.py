@@ -41,6 +41,19 @@ quantiles then appear in ``/metrics`` and in the report's
     curl -s localhost:9100/metrics | grep slo_attainment
     curl -s localhost:9100/healthz
 
+``--tau-dtype bf16|int8`` (DESIGN.md §15) holds every resident pheromone
+matrix in low precision — bf16 halves, int8 (with per-row scales)
+quarters the per-slot tau bytes, so a streaming pool fits 2-4x the
+resident slots in the same memory; compute stays fp32 (the Pallas
+selection kernels dequantise tile-by-tile in their epilogue) and
+solution quality stays within 1% absolute of fp32 (benchmarks/quality
+``quant_rows``):
+
+    PYTHONPATH=src python -m repro.launch.solve_serve --tau-dtype int8 \\
+        --num-instances 8 --iterations 20 --variant mmas
+    PYTHONPATH=src python -m repro.launch.solve_serve --stream \\
+        --tau-dtype int8 --num-instances 8 --chunk 2 --iterations 10
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.solve_serve \
         --num-instances 8 --min-n 12 --max-n 48 --iterations 20
@@ -164,6 +177,16 @@ def main() -> None:
     ap.add_argument("--use-pallas", action="store_true",
                     help="route choice/construction/deposit through the "
                          "mask-aware Pallas kernels (interpret mode on CPU)")
+    # quantised resident pheromone (core/quant.py, DESIGN.md §15)
+    ap.add_argument("--tau-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="resident pheromone precision: bf16 halves / int8 "
+                         "quarters the per-slot tau bytes (per-row scales, "
+                         "stochastic quantise-on-store); compute and the "
+                         "kernel dequant epilogues stay fp32")
+    ap.add_argument("--tau-round", default="stochastic",
+                    choices=["stochastic", "nearest"],
+                    help="--tau-dtype bf16/int8: quantise-on-store rounding")
     # sparse/paged representation (DESIGN.md §12)
     ap.add_argument("--sparse", action="store_true",
                     help="candidate-list-restricted O(n*k) representation: "
@@ -239,6 +262,7 @@ def main() -> None:
                         use_pallas=args.use_pallas, sparse=args.sparse,
                         sparse_k=args.sparse_k,
                         sparse_overflow=args.sparse_overflow,
+                        tau_dtype=args.tau_dtype, tau_round=args.tau_round,
                         metrics=args.metrics)
     mesh = make_data_mesh(args.devices) if args.shard else None
     tel = obs.Telemetry(events_path=args.events_out,

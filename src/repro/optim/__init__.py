@@ -1,5 +1,7 @@
 from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
-from .compression import compress_grads, decompress_grads, CompressionState
+from .compression import (CompressionState, compress_grads, compression_init,
+                          decompress_grads, dequantize_int8, quantize_int8)
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
-           "compress_grads", "decompress_grads", "CompressionState"]
+           "compress_grads", "decompress_grads", "CompressionState",
+           "compression_init", "quantize_int8", "dequantize_int8"]

@@ -28,8 +28,29 @@ def compression_init(params: PyTree) -> CompressionState:
         error=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params))
 
 
-def _quantize(x: jax.Array, key: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+def quantize_int8(x: jax.Array, key: Optional[jax.Array] = None,
+                  axis: Optional[int] = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """int8 quantisation with symmetric scales.
+
+    ``axis=None`` gives the original per-tensor scalar scale (the gradient
+    all-reduce path); an integer axis gives one scale per slice along that
+    axis (kept as a size-1 dim, so ``q * scale`` broadcasts back) — the
+    per-row granularity the quantised pheromone store needs (core/quant.py):
+    MMAS rows saturate at very different tau levels, and a per-tensor scale
+    would crush cold rows to zero.
+
+    ``key`` switches round-to-nearest to stochastic rounding
+    (``floor(y + uniform)``): unbiased in expectation, so values below half
+    a quantisation step survive on average instead of deterministically
+    rounding to 0 — the property the error-feedback/ACO-exploration
+    machinery relies on.
+    """
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
     y = x / scale
     if key is not None:                       # stochastic rounding
         y = jnp.floor(y + jax.random.uniform(key, y.shape))
@@ -37,6 +58,16 @@ def _quantize(x: jax.Array, key: Optional[jax.Array]) -> tuple[jax.Array, jax.Ar
         y = jnp.round(y)
     q = jnp.clip(y, -127, 127).astype(jnp.int8)
     return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# backwards-compatible private alias (original per-tensor signature)
+def _quantize(x: jax.Array, key: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    return quantize_int8(x, key)
 
 
 def compress_grads(grads: PyTree, state: Optional[CompressionState],

@@ -63,7 +63,7 @@ def init_state(instance: tsp.TSPInstance, cfg: aco.ACOConfig, seed: int,
     tau0 = aco.initial_tau(
         instance, cfg, rho=None if hyper is None else float(hyper.rho))
     return aco.ColonyState(
-        tau=jnp.full((n_pad, n_pad), tau0, jnp.float32),
+        tau=aco.make_tau(jnp.full((n_pad, n_pad), tau0, jnp.float32), cfg),
         best_tour=jnp.arange(n_pad, dtype=jnp.int32),
         best_len=jnp.asarray(np.float32(np.inf)),
         iteration=jnp.asarray(0, jnp.int32),

@@ -388,7 +388,12 @@ class StreamingSolverService:
             # per-slot Hyper operands need traced exponents, kernels need
             # static ones.  Fail eagerly with the kernels' own typed error.
             from repro.kernels import ops as kops
-            kops.check_kernel_route(hyper=True)
+            kops.check_kernel_route(hyper=True, tau_dtype=cfg.tau_dtype)
+        if per_instance_hyper and cfg.tau_dtype != "fp32":
+            # quantised x per-slot Hyper is unsupported on every route;
+            # fail at construction, not at the first admitted request.
+            from repro.kernels import ops as kops
+            kops.check_kernel_route(hyper=True, tau_dtype=cfg.tau_dtype)
         if cfg.sparse:
             # slot surgery assumes dense (n, n) ColonyState buffers
             from repro.kernels import ops as kops

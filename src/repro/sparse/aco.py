@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aco as dense_aco
-from repro.core import tsp
+from repro.core import quant, tsp
 
 from . import construct, pheromone, store
 from .store import SparseColonyState, SparseProblem
@@ -38,7 +38,8 @@ def check_sparse_route(cfg: dense_aco.ACOConfig, hyper: bool = False,
     kops.check_kernel_route(masked=masked, hyper=hyper, sparse=True,
                             selection=cfg.selection,
                             local_search=cfg.local_search,
-                            construction=cfg.construction)
+                            construction=cfg.construction,
+                            tau_dtype=cfg.tau_dtype)
 
 
 def make_sparse_problem_cfg(instance: tsp.TSPInstance,
@@ -76,15 +77,25 @@ def init_sparse_colony(instance: tsp.TSPInstance, cfg: dense_aco.ACOConfig,
         best_len = jnp.asarray(np.float32(np.inf))
     o = cfg.sparse_overflow
     return SparseColonyState(
-        tau=jnp.full((n_pad, k), tau0, jnp.float32),
+        tau=dense_aco.make_tau(jnp.full((n_pad, k), tau0, jnp.float32),
+                               cfg),
         tau_def=jnp.asarray(np.float32(tau0)),
         ovf_city=jnp.full((n_pad, o), store.OVF_EMPTY, jnp.int32),
-        ovf_tau=jnp.zeros((n_pad, o), jnp.float32),
+        ovf_tau=_make_ovf_tau(jnp.zeros((n_pad, o), jnp.float32), cfg),
         best_tour=best_tour,
         best_len=best_len,
         iteration=jnp.asarray(0, jnp.int32),
         key=jax.random.PRNGKey(cfg.seed if seed is None else seed),
     )
+
+
+def _make_ovf_tau(ovf_f32, cfg: dense_aco.ACOConfig):
+    """Overflow pages follow the store dtype but never carry an
+    error-feedback residual: slots churn (adopt/evict) so a carried
+    per-slot residual would attribute one edge's error to another."""
+    if not quant.is_quantised(cfg.tau_dtype):
+        return ovf_f32
+    return quant.quantise(ovf_f32, cfg.tau_dtype)
 
 
 @partial(jax.jit, static_argnames=("cfg", "ewt"))
@@ -105,7 +116,14 @@ def sparse_colony_step(problem: SparseProblem, state: SparseColonyState,
     m = cfg.num_ants(n)
     n_act = problem.n_actual
     check_sparse_route(cfg, masked=n_act is not None)
-    key, k_tour = jax.random.split(state.key)
+    quantised = quant.is_quantised(cfg.tau_dtype)
+    if quantised:
+        # extra split feeds the two quantise-on-store steps (tau pages and
+        # overflow pages); the fp32 branch keeps today's two-way split.
+        key, k_tour, k_q = jax.random.split(state.key, 3)
+    else:
+        key, k_tour = jax.random.split(state.key)
+        k_q = None
 
     if cfg.construction == "partial":
         res = construct.partial_tours(
@@ -147,8 +165,12 @@ def sparse_colony_step(problem: SparseProblem, state: SparseColonyState,
         raise ValueError(f"unknown variant {cfg.variant}")
 
     adopt = cfg.variant in ("mmas", "acs") and cfg.sparse_overflow > 0
+    # Transient fp32 views for the update/clamp path (identity for fp32);
+    # construction above consumed the resident payload directly.
+    tau_full = quant.dequantise(state.tau) if quantised else state.tau
+    ovf_full = quant.dequantise(state.ovf_tau) if quantised else state.ovf_tau
     tau, tau_def, ovf_city, ovf_tau = pheromone.update_sparse(
-        state.tau, state.tau_def, state.ovf_city, state.ovf_tau,
+        tau_full, state.tau_def, state.ovf_city, ovf_full,
         problem.cand, dep_tours, dep_w, rho, adopt, n_act)
 
     n_eff = n if n_act is None else n_act
@@ -166,7 +188,19 @@ def sparse_colony_step(problem: SparseProblem, state: SparseColonyState,
             tau, tau_def, ovf_tau, problem.cand, res.tours, cfg.xi, tau0,
             n_act)
 
-    new_state = SparseColonyState(tau, tau_def, ovf_city, ovf_tau,
+    # Quantise-on-store: pages and overflow each requantise with their
+    # own key; metrics below read the exact fp32 tau of this step.
+    tau_store, ovf_store = tau, ovf_tau
+    if quantised:
+        k_q1, k_q2 = jax.random.split(k_q)
+        tau_store = quant.requantise(
+            tau, state.tau, cfg.tau_dtype,
+            quant.round_key(cfg.tau_round, k_q1))
+        ovf_store = quant.requantise(
+            ovf_tau, state.ovf_tau, cfg.tau_dtype,
+            quant.round_key(cfg.tau_round, k_q2))
+
+    new_state = SparseColonyState(tau_store, tau_def, ovf_city, ovf_store,
                                   best_tour, best_len,
                                   state.iteration + 1, key)
     if not cfg.metrics:

@@ -43,7 +43,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import strategies, tsp
+from repro.core import quant, strategies, tsp
 from repro.core.strategies import TourResult
 
 from . import store
@@ -54,21 +54,33 @@ Array = jax.Array
 _NEG_INF = -1e30
 
 
-def _candidate_page(problem: SparseProblem, tau: Array, ovf_city: Array,
-                    ovf_tau: Array, cur: Array, ewt: str
-                    ) -> tuple[Array, Array, Array, Array]:
+def _candidate_page(problem: SparseProblem, tau, ovf_city: Array,
+                    ovf_tau, cur: Array, ewt: str
+                    ) -> tuple[Array, Array, Optional[Array], Array, Array]:
     """Gather the extended candidate row for each ant's current city.
 
-    Returns (cities, tau_row, eta_row, dist_row), all (m, k+O).  Overflow
-    slots are appended after the k candidates; empty slots map to the
-    ant's own (always-visited) city, so every selection rule masks them to
-    weight 0 — the same self-sentinel ``tsp.nn_lists`` uses for surplus
-    positions.  Overflow eta/distances are lazy (float32 page-fault path):
-    at k = n-1 every slot is empty, so the bitwise contract never sees a
-    lazy value.
+    Returns (cities, tau_row, tau_scale, eta_row, dist_row); all (m, k+O)
+    except tau_scale.  Overflow slots are appended after the k candidates;
+    empty slots map to the ant's own (always-visited) city, so every
+    selection rule masks them to weight 0 — the same self-sentinel
+    ``tsp.nn_lists`` uses for surplus positions.  Overflow eta/distances
+    are lazy (float32 page-fault path): at k = n-1 every slot is empty, so
+    the bitwise contract never sees a lazy value.
+
+    Quantised stores (core/quant.py): ``tau``/``ovf_tau`` arrive as
+    QuantTau pytrees; the gathered ``tau_row`` is then the raw int8/bf16
+    payload and ``tau_scale`` the (m, k+O) per-row scales for int8
+    (candidate and overflow columns each broadcast their own store's
+    scale) — only the (m, K) transient is ever dequantised, never the
+    resident pages.
     """
+    quantised = isinstance(tau, quant.QuantTau)
+    tau_store = tau.q if quantised else tau
     cities = problem.cand[cur]                       # (m, k)
-    tau_row = tau[cur]
+    tau_row = tau_store[cur]
+    tau_scale = None
+    if quantised and tau.q.dtype == jnp.int8:
+        tau_scale = jnp.broadcast_to(tau.scale[cur], tau_row.shape)
     eta_row = problem.cand_eta[cur]
     dist_row = problem.cand_dist[cur]
     o = ovf_city.shape[-1]
@@ -78,11 +90,16 @@ def _candidate_page(problem: SparseProblem, tau: Array, ovf_city: Array,
         od = store.lazy_pair(problem.coords, jnp.broadcast_to(
             cur[:, None], oc.shape), oc, ewt)
         oe = 1.0 / jnp.maximum(od, 1e-10)
+        ovf_store = ovf_tau.q if quantised else ovf_tau
         cities = jnp.concatenate([cities, oc], axis=-1)
-        tau_row = jnp.concatenate([tau_row, ovf_tau[cur]], axis=-1)
+        tau_row = jnp.concatenate([tau_row, ovf_store[cur]], axis=-1)
+        if tau_scale is not None:
+            oscale = jnp.broadcast_to(ovf_tau.scale[cur],
+                                      (oc.shape[0], o))
+            tau_scale = jnp.concatenate([tau_scale, oscale], axis=-1)
         eta_row = jnp.concatenate([eta_row, oe], axis=-1)
         dist_row = jnp.concatenate([dist_row, od], axis=-1)
-    return cities, tau_row, eta_row, dist_row
+    return cities, tau_row, tau_scale, eta_row, dist_row
 
 
 def _score(w: Array, rand_full: Array, cities: Array, ants: Array,
@@ -163,17 +180,18 @@ def _construct_sparse(key: Array, problem: SparseProblem, tau: Array,
 
     def body(st: _SparseCarry, t: Array):
         k_ = jax.random.fold_in(kc, t)
-        cities, tau_row, eta_row, dist_row = _candidate_page(
+        cities, tau_row, tau_scale, eta_row, dist_row = _candidate_page(
             problem, tau, ovf_city, ovf_tau, st.cur, ewt)
         rand_full = _draw(k_, m, n, selection, use_pallas)
         if use_pallas:
             from repro.kernels import ops as kops
             pos, have = kops.sparse_select(
                 tau_row, eta_row, cities, st.visited, rand_full,
-                alpha, beta, selection)
+                alpha, beta, selection, tau_scale=tau_scale)
         else:
             cmask = ~st.visited[ants[:, None], cities]
-            w = strategies.choice_matrix(tau_row, eta_row, alpha, beta) \
+            tau_row_f = quant.dequantise_rows(tau_row, tau_scale)
+            w = strategies.choice_matrix(tau_row_f, eta_row, alpha, beta) \
                 * cmask
             have = w.sum(-1) > 0
             pos = jnp.argmax(
@@ -269,17 +287,18 @@ def _partial_impl(key: Array, problem: SparseProblem, tau: Array,
 
     def body(st: _SparseCarry, t: Array):
         k_ = jax.random.fold_in(kc, t)
-        cities, tau_row, eta_row, dist_row = _candidate_page(
+        cities, tau_row, tau_scale, eta_row, dist_row = _candidate_page(
             problem, tau, ovf_city, ovf_tau, st.cur, ewt)
         rand_full = _draw(k_, m, n, selection, use_pallas)
         if use_pallas:
             from repro.kernels import ops as kops
             pos, have = kops.sparse_select(
                 tau_row, eta_row, cities, st.visited, rand_full,
-                alpha, beta, selection)
+                alpha, beta, selection, tau_scale=tau_scale)
         else:
             cmask = ~st.visited[ants[:, None], cities]
-            w = strategies.choice_matrix(tau_row, eta_row, alpha, beta) \
+            tau_row_f = quant.dequantise_rows(tau_row, tau_scale)
+            w = strategies.choice_matrix(tau_row_f, eta_row, alpha, beta) \
                 * cmask
             have = w.sum(-1) > 0
             pos = jnp.argmax(

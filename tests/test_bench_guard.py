@@ -18,7 +18,16 @@ STREAMING_PAYLOAD = {
         {"mode": "drain", "ips": 20.0, "lat_mean_s": 0.5},
         {"mode": "streaming", "ips": 30.0, "lat_mean_s": 0.2},
     ],
-    "summary": {"ips_ratio": 1.5, "lat_mean_ratio": 0.4},
+    "summary": {"ips_ratio": 1.5, "lat_mean_ratio": 0.4,
+                "tau_ratio_bf16": 2.0, "tau_ratio_int8": 3.5},
+    "residency": [
+        {"tau_dtype": "fp32", "state_bytes_per_slot": 4240,
+         "slots_per_gb": 235849},
+        {"tau_dtype": "bf16", "state_bytes_per_slot": 2192,
+         "slots_per_gb": 456204},
+        {"tau_dtype": "int8", "state_bytes_per_slot": 1296,
+         "slots_per_gb": 771604},
+    ],
 }
 
 OBS_PAYLOAD = {

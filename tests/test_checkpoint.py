@@ -39,6 +39,54 @@ def test_restart_resumes_exactly(tmp_path):
     assert float(resumed.best_len) == float(full.best_len)
 
 
+@pytest.mark.parametrize("tau_dtype", ["int8", "bf16"])
+def test_quantised_state_roundtrip_bit_exact(tmp_path, tau_dtype):
+    """QuantTau leaves (int8/bf16 payload, per-row scales, zero-width err)
+    survive save/load bit-exact — bf16 rides as raw uint16 bits in the
+    npz, so no value can be perturbed by a dtype bounce."""
+    inst = tsp.random_instance(16, seed=4)
+    cfg = aco.ACOConfig(iterations=3, tau_dtype=tau_dtype,
+                        selection="gumbel")
+    st = aco.run(inst, cfg)
+    path = str(tmp_path / "q.npz")
+    ck.save_pytree(path, st, step=3)
+    rest = ck.load_pytree(path, st)
+    assert rest.tau.q.dtype == st.tau.q.dtype
+    q0, q1 = np.asarray(st.tau.q), np.asarray(rest.tau.q)
+    if tau_dtype == "bf16":
+        q0, q1 = q0.view(np.uint16), q1.view(np.uint16)
+    np.testing.assert_array_equal(q0, q1)
+    np.testing.assert_array_equal(np.asarray(st.tau.scale),
+                                  np.asarray(rest.tau.scale))
+    assert rest.tau.err.shape == st.tau.err.shape     # zero-width survives
+    assert float(rest.best_len) == float(st.best_len)
+
+
+def test_quantised_restart_resumes_bitwise(tmp_path):
+    """Kill-and-restart over a quantised store reproduces the
+    uninterrupted trajectory bitwise: the PRNG trajectory (including the
+    quantise-on-store split) lives in the state, and the resident payload
+    is restored bit-for-bit, so requantisation cannot drift."""
+    inst = tsp.random_instance(20, seed=1)
+    cfg = aco.ACOConfig(iterations=6, selection="gumbel", tau_dtype="int8",
+                        variant="mmas")
+    full = aco.run(inst, cfg)
+    mgr = ck.CheckpointManager(str(tmp_path), async_write=False)
+    st = aco.run(inst, aco.ACOConfig(iterations=3, selection="gumbel",
+                                     tau_dtype="int8", variant="mmas"))
+    mgr.save(3, st)
+    restored, step = mgr.restore(st)
+    assert step == 3
+    resumed = aco.run(inst, cfg, state=restored)
+    np.testing.assert_array_equal(np.asarray(resumed.tau.q),
+                                  np.asarray(full.tau.q))
+    np.testing.assert_array_equal(np.asarray(resumed.tau.scale),
+                                  np.asarray(full.tau.scale))
+    assert float(resumed.best_len) == float(full.best_len)
+    np.testing.assert_array_equal(np.asarray(resumed.key),
+                                  np.asarray(full.key))
+
+
 def test_manager_retention_and_latest(tmp_path):
     mgr = ck.CheckpointManager(str(tmp_path), keep=2, async_write=False)
     tree = {"a": jnp.arange(4), "b": jnp.ones((2, 2))}

@@ -1,0 +1,366 @@
+"""Quantised pheromone pipeline tests (DESIGN.md §15, core/quant.py).
+
+Load-bearing contracts:
+
+1. optim/compression int8 round-trip error is bounded by half a
+   quantisation step (per-tensor and per-row), and error feedback makes
+   repeated accumulation exact in the mean.
+2. QuantTau pytree structure is static per config — zero-width leaves for
+   unused slots — and fp32 configs keep the raw Array leaf untouched.
+3. The fused/sparse kernel tile-dequant epilogues are bitwise equal to
+   the ref.py dequantise-then-select oracles, for every mode.
+4. Whole quantised colony runs are bitwise identical between the pure
+   and Pallas routes, and engine batched == solo on every leaf
+   (payload bits and scales included).
+5. The route matrix rejects what is genuinely unsupported: quantised x
+   per-instance Hyper (every route), islands, city-sharded colonies,
+   unknown dtypes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aco, quant, tsp
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.optim.compression import dequantize_int8, quantize_int8
+from repro.solver import engine
+
+KEY = jax.random.PRNGKey(11)
+
+
+# ---------------------------------------------------- optim/compression int8
+def test_quantize_int8_per_tensor_roundtrip():
+    x = jax.random.normal(KEY, (33, 65)) * 4.0
+    q, scale = quantize_int8(x)                    # deterministic nearest
+    assert q.dtype == jnp.int8 and scale.shape == ()
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-7
+
+
+def test_quantize_int8_per_row_scales():
+    """Rows of wildly different magnitude each get their own scale, so the
+    relative error stays bounded per row — a per-tensor scale would crush
+    the cold rows to zero."""
+    k1, k2 = jax.random.split(KEY)
+    hot = jax.random.uniform(k1, (4, 64), minval=0.5, maxval=8.0)
+    cold = jax.random.uniform(k2, (4, 64), minval=1e-4, maxval=2e-3)
+    x = jnp.concatenate([hot, cold], axis=0)
+    q, scale = quantize_int8(x, axis=-1)
+    assert scale.shape == (8, 1)                   # keepdims per-row
+    deq = np.asarray(dequantize_int8(q, scale))
+    err = np.abs(deq - np.asarray(x))
+    assert (err <= np.asarray(scale) * 0.5 + 1e-9).all()
+    # cold rows survive: a per-tensor scale (~8/127) would zero them out
+    assert (np.abs(deq[4:]) > 0).any(axis=-1).all()
+
+
+def test_quantize_int8_stochastic_is_unbiased():
+    # row max 1.0 fixes scale = 1/127; 0.31 then sits between int8 steps
+    x = jnp.full((1, 256), 0.31).at[0, 0].set(1.0)
+    keys = jax.random.split(jax.random.fold_in(KEY, 3), 64)
+    deqs = [np.asarray(dequantize_int8(*quantize_int8(x, key=k,
+                                                      axis=-1)))[0, 1:]
+            for k in keys]
+    mean = np.stack(deqs).mean()
+    step = 1.0 / 127.0
+    assert abs(mean - 0.31) < 0.25 * step          # << half-step bias
+    # individual draws actually straddle the value (rounding is random)
+    assert min(d.min() for d in deqs) < 0.31 < max(d.max() for d in deqs)
+
+
+def test_compensated_accumulation_is_exact_in_the_limit():
+    """Error feedback (optim/compression invariant): carrying the residual
+    across repeated tiny deposits keeps the accumulated dequantised value
+    tracking the exact fp32 sum, while the uncompensated store stalls."""
+    rows, width, steps, inc = 1, 64, 200, 1e-3
+    exact = 0.1 + steps * inc
+    plain = quant.quantise(jnp.full((rows, width), 0.1), "int8")
+    comp = quant.quantise(jnp.full((rows, width), 0.1), "int8",
+                          compensation=True)
+    assert comp.err.shape == (rows, width) and plain.err.shape == (rows, 0)
+    for _ in range(steps):
+        plain = quant.requantise(quant.dequantise(plain) + inc, plain, "int8")
+        comp = quant.requantise(quant.dequantise(comp) + inc, comp, "int8")
+    got_comp = float(np.asarray(quant.dequantise(comp) + comp.err).mean())
+    got_plain = float(np.asarray(quant.dequantise(plain)).mean())
+    assert abs(got_comp - exact) < 1e-5            # q*scale + err is exact
+    assert abs(got_comp - exact) < abs(got_plain - exact)
+
+
+# ----------------------------------------------------------- QuantTau pytree
+def test_quant_tau_leaf_structure_per_dtype():
+    x = jax.random.uniform(KEY, (16, 16)) + 0.1
+    t8 = quant.quantise(x, "int8")
+    assert t8.q.dtype == jnp.int8 and t8.scale.shape == (16, 1)
+    assert t8.err.shape == (16, 0)                 # compensation off
+    tb = quant.quantise(x, "bf16")
+    assert tb.q.dtype == jnp.bfloat16
+    assert tb.scale.shape == (16, 0) and tb.err.shape == (16, 0)
+    # bf16 needs no scale: dequant is exactly the f32 cast
+    np.testing.assert_array_equal(np.asarray(quant.dequantise(tb)),
+                                  np.asarray(x.astype(jnp.bfloat16)
+                                              .astype(jnp.float32)))
+    # always 3 leaves -> static pytree structure per config
+    assert len(jax.tree.leaves(t8)) == len(jax.tree.leaves(tb)) == 3
+
+
+def test_quantise_zero_width_store():
+    """sparse_overflow=0 pages quantise without reducing over an empty
+    axis, keeping the same leaf dtypes as the non-empty case."""
+    z = jnp.zeros((8, 0), jnp.float32)
+    t8 = quant.quantise(z, "int8")
+    assert t8.q.dtype == jnp.int8 and t8.q.shape == (8, 0)
+    assert t8.scale.shape == (8, 1)
+    tb = quant.quantise(z, "bf16")
+    assert tb.q.dtype == jnp.bfloat16 and tb.scale.shape == (8, 0)
+
+
+def test_make_tau_fp32_is_raw_array_and_nbytes_ratios():
+    n = 64
+    x = jax.random.uniform(KEY, (n, n), minval=0.05, maxval=2.0)
+    cfg32 = aco.ACOConfig()
+    raw = aco.make_tau(x, cfg32)
+    assert raw is x                                # untouched leaf: bitwise
+    f32 = quant.tau_nbytes(raw)
+    bf = quant.tau_nbytes(aco.make_tau(x, aco.ACOConfig(tau_dtype="bf16")))
+    i8 = quant.tau_nbytes(aco.make_tau(x, aco.ACOConfig(tau_dtype="int8")))
+    assert f32 == n * n * 4
+    assert f32 / bf == 2.0                         # exact: no scale leaf
+    assert f32 / i8 >= 3.0                         # payload + (n,1) scales
+    with pytest.raises(ValueError, match="tau_dtype"):
+        quant.validate_tau_dtype("fp8")
+    with pytest.raises(ValueError, match="tau_round"):
+        quant.validate_tau_dtype("int8", "banker")
+
+
+def test_round_key_discipline():
+    k = jax.random.PRNGKey(0)
+    assert quant.round_key("stochastic", k) is k
+    assert quant.round_key("nearest", k) is None
+
+
+# ------------------------------------------------- kernel dequant epilogues
+def _quant_fused_case(tau_dtype, mode, m=9, n=130, alpha=1.0, beta=2.0,
+                      n_actual=None, seed=0):
+    from repro.kernels import fused_select as fs_k
+    k = jax.random.fold_in(KEY, seed * 7919 + m * 31 + n)
+    tau = jax.random.uniform(k, (n, n), minval=0.05, maxval=2.0)
+    eta = jax.random.uniform(jax.random.fold_in(k, 1), (n, n)) + 0.1
+    hi = n if n_actual is None else int(n_actual)
+    if n_actual is not None:
+        eta = eta.at[:, hi:].set(0.0).at[hi:, :].set(0.0)
+    cur = jax.random.randint(jax.random.fold_in(k, 2), (m,), 0, hi)
+    vis = jax.random.uniform(jax.random.fold_in(k, 3), (m, n)) < 0.5
+    vis = vis.at[:, 0].set(False)
+    rand = jax.random.uniform(jax.random.fold_in(k, 4), (m, n),
+                              minval=1e-6, maxval=1.0)
+    na = None if n_actual is None else jnp.int32(n_actual)
+    t = quant.quantise(tau, tau_dtype)
+    scale = t.scale if tau_dtype == "int8" else None
+    got = fs_k.fused_select(t.q, eta, cur, vis, rand, alpha, beta, na, mode,
+                            tau_scale=scale, interpret=True)
+    exp = ref.fused_select_quant(t.q, scale, eta, cur, vis.astype(jnp.int8),
+                                 rand, alpha, beta, na, mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("mode", ["iroulette", "gumbel", "greedy"])
+@pytest.mark.parametrize("tau_dtype", ["bf16", "int8"])
+def test_fused_select_quant_matches_oracle(tau_dtype, mode):
+    """The kernel's per-tile dequant epilogue (one-hot gather of payload,
+    then multiply by the gathered per-row scale) must be bitwise the
+    oracle's full-dequantise-then-select — identical f32 multiply
+    operands, so gather/dequant order cannot matter."""
+    _quant_fused_case(tau_dtype, mode)
+    _quant_fused_case(tau_dtype, mode, n=259, n_actual=197)
+
+
+@pytest.mark.parametrize("mode", ["iroulette", "gumbel", "greedy"])
+@pytest.mark.parametrize("tau_dtype", ["bf16", "int8"])
+def test_sparse_select_quant_matches_oracle(tau_dtype, mode):
+    m, n, kk = 13, 100, 9
+    ks = jax.random.split(jax.random.fold_in(KEY, hash(mode) % 1000), 5)
+    tau = jax.random.uniform(ks[0], (m, kk), minval=0.05, maxval=2.0)
+    eta = jax.random.uniform(ks[1], (m, kk)) + 0.1
+    cand = jax.random.randint(ks[2], (m, kk), 0, n)
+    cand = jnp.where(jax.random.bernoulli(ks[3], 0.1, (m, kk)), -1, cand)
+    visited = jax.random.bernoulli(ks[3], 0.4, (m, n))
+    rand = jax.random.uniform(ks[4], (m, n), jnp.float32, 1e-6, 1.0)
+    t = quant.quantise(tau, tau_dtype)
+    if tau_dtype == "int8":
+        rows, scale = t.q, jnp.broadcast_to(t.scale, (m, kk))
+    else:
+        rows, scale = t.q, None
+    pos, have = kops.sparse_select(rows, eta, cand, visited, rand,
+                                   1.0, 2.0, mode, tau_scale=scale)
+    rpos, rhave = ref.sparse_select_quant(rows, scale, eta, cand, visited,
+                                          rand, 1.0, 2.0, mode)
+    np.testing.assert_array_equal(np.asarray(have), np.asarray(rhave))
+    live = np.asarray(have).astype(bool)
+    np.testing.assert_array_equal(np.asarray(pos)[live],
+                                  np.asarray(rpos)[live])
+
+
+# ------------------------------------------------------- whole colony runs
+def _state_bits(st):
+    out = {}
+    for name, leaf in zip(st._fields, st):
+        for sub in jax.tree.leaves(leaf):
+            a = np.asarray(sub)
+            out[f"{name}:{a.dtype}"] = a.view(np.uint8).sum() if a.size \
+                else 0
+    return out
+
+
+@pytest.mark.parametrize("variant,full_bitwise", [
+    ("as", False),     # m ants deposit: summation order differs by design
+    ("mmas", True),    # single-tour deposit: every cell gets <= 1 deposit
+    ("acs", False),    # shared post-deposit math fuses differently (ulp)
+])
+@pytest.mark.parametrize("tau_dtype", ["bf16", "int8"])
+def test_quantised_pure_matches_pallas(variant, full_bitwise, tau_dtype):
+    """The fused tile-dequant route against the pure route through whole
+    quantised runs: tours / best lengths / keys bitwise always; the
+    resident payload+scales bitwise where the fp32 deposit is single-hit
+    per cell (MMAS — the same contract the fp32 routes carry), ulp-close
+    on the dequantised store otherwise."""
+    inst = tsp.random_instance(24, seed=9)
+    cfg = aco.ACOConfig(iterations=5, variant=variant, selection="gumbel",
+                        tau_dtype=tau_dtype)
+    pure = aco.run(inst, cfg)
+    pal = aco.run(inst, dataclasses.replace(cfg, use_pallas=True))
+    assert isinstance(pure.tau, quant.QuantTau)
+    if full_bitwise:
+        np.testing.assert_array_equal(np.asarray(pure.tau.q),
+                                      np.asarray(pal.tau.q))
+        np.testing.assert_array_equal(np.asarray(pure.tau.scale),
+                                      np.asarray(pal.tau.scale))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(quant.dequantise(pure.tau)),
+            np.asarray(quant.dequantise(pal.tau)), rtol=1e-4, atol=1e-6)
+    assert float(pure.best_len) == float(pal.best_len)
+    np.testing.assert_array_equal(np.asarray(pure.best_tour),
+                                  np.asarray(pal.best_tour))
+    np.testing.assert_array_equal(np.asarray(pure.key), np.asarray(pal.key))
+
+
+def test_quantised_run_produces_valid_tours_nearest_and_compensated():
+    inst = tsp.circle_instance(20, seed=2)
+    for kw in ({"tau_round": "nearest"}, {"tau_compensation": True}):
+        cfg = aco.ACOConfig(iterations=4, variant="mmas", tau_dtype="int8",
+                            selection="gumbel", **kw)
+        st = aco.run(inst, cfg)
+        assert tsp.is_valid_tour(np.asarray(st.best_tour))
+        assert np.isfinite(float(st.best_len))
+        want = (20, 20) if kw.get("tau_compensation") else (20, 0)
+        assert st.tau.err.shape == want
+
+
+def test_fp32_trajectory_untouched_by_quant_plumbing():
+    """tau_dtype='fp32' must keep the raw Array leaf and the exact 2-way
+    key split — bitwise the pre-quantisation trajectory."""
+    inst = tsp.random_instance(16, seed=3)
+    st = aco.run(inst, aco.ACOConfig(iterations=3))
+    assert not isinstance(st.tau, quant.QuantTau)
+    assert st.tau.dtype == jnp.float32
+
+
+def test_sparse_quantised_pure_matches_pallas():
+    from repro.sparse import aco as sa
+    inst = tsp.random_instance(32, seed=4)
+    for tau_dtype in ("bf16", "int8"):
+        cfg = aco.ACOConfig(iterations=4, variant="mmas", sparse=True,
+                            sparse_k=8, selection="iroulette",
+                            tau_dtype=tau_dtype)
+        pure = sa.run_sparse(inst, cfg)
+        pal = sa.run_sparse(inst, dataclasses.replace(cfg, use_pallas=True))
+        assert isinstance(pure.tau, quant.QuantTau)
+        np.testing.assert_array_equal(np.asarray(pure.tau.q),
+                                      np.asarray(pal.tau.q))
+        np.testing.assert_array_equal(np.asarray(pure.ovf_tau.q),
+                                      np.asarray(pal.ovf_tau.q))
+        assert float(pure.best_len) == float(pal.best_len)
+        assert tsp.is_valid_tour(np.asarray(pure.best_tour))
+
+
+def test_sparse_quantised_zero_overflow():
+    from repro.sparse import aco as sa
+    inst = tsp.circle_instance(24, seed=5)
+    cfg = aco.ACOConfig(iterations=3, sparse=True, sparse_k=8,
+                        sparse_overflow=0, tau_dtype="int8",
+                        selection="gumbel")
+    st = sa.run_sparse(inst, cfg)
+    assert st.ovf_tau.q.shape[-1] == 0
+    assert tsp.is_valid_tour(np.asarray(st.best_tour))
+
+
+# --------------------------------------------------------- engine == solo
+def test_engine_batched_matches_solo_bitwise_int8():
+    """Batched quantised slots must be bitwise the solo runs on every
+    leaf — payload bits and per-row scales included (slot stacking /
+    surgery never mixes quantised state across slots)."""
+    insts = [tsp.random_instance(n, seed=n) for n in (10, 13, 12)]
+    cfg = aco.ACOConfig(iterations=5, variant="mmas", selection="gumbel",
+                        tau_dtype="int8")
+    batched, _ = engine.solve_instances(insts, cfg, iterations=[5, 5, 5],
+                                        seeds=[1, 2, 3], n_pad=16)
+    for i, inst in enumerate(insts):
+        solo, _ = engine.solve_instances([inst], cfg, iterations=[5],
+                                         seeds=[1 + i], n_pad=16)
+        np.testing.assert_array_equal(np.asarray(batched.tau.q[i]),
+                                      np.asarray(solo.tau.q[0]))
+        np.testing.assert_array_equal(np.asarray(batched.tau.scale[i]),
+                                      np.asarray(solo.tau.scale[0]))
+        assert float(batched.best_len[i]) == float(solo.best_len[0])
+        np.testing.assert_array_equal(np.asarray(batched.best_tour[i]),
+                                      np.asarray(solo.best_tour[0]))
+
+
+# ------------------------------------------------------------ route matrix
+def test_route_matrix_rejects_quantised_hyper():
+    for dt in ("int8", "bf16"):
+        with pytest.raises(kops.UnsupportedKernelRoute, match="quantised"):
+            kops.check_kernel_route(hyper=True, tau_dtype=dt)
+    # quantised alone stays accepted on the kernel and sparse routes
+    kops.check_kernel_route(tau_dtype="int8")
+    kops.check_kernel_route(sparse=True, tau_dtype="bf16",
+                            selection="gumbel")
+    with pytest.raises(kops.UnsupportedKernelRoute, match="tau_dtype"):
+        kops.check_kernel_route(tau_dtype="fp16")
+
+
+def test_colony_step_rejects_quantised_hyper_on_pure_route():
+    inst = tsp.random_instance(10, seed=0)
+    cfg = aco.ACOConfig(iterations=1, tau_dtype="int8")
+    prob = aco.make_problem(inst, cfg.nn_k)
+    prob = prob._replace(hyper=aco.Hyper.make(cfg, alpha=2.0))
+    st = aco.init_colony(inst, cfg)
+    with pytest.raises(kops.UnsupportedKernelRoute, match="quantised"):
+        aco.colony_step(prob, st, cfg)
+
+
+def test_streaming_rejects_quantised_hyper_eagerly():
+    from repro.solver import streaming
+    cfg = aco.ACOConfig(iterations=2, tau_dtype="int8")
+    streaming.StreamingSolverService(cfg)          # quantised alone: fine
+    with pytest.raises(kops.UnsupportedKernelRoute, match="Hyper"):
+        streaming.StreamingSolverService(cfg, per_instance_hyper=True)
+
+
+def test_islands_and_city_sharded_reject_quantised():
+    from repro.core import islands
+    inst = tsp.circle_instance(12, seed=0)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    icfg = islands.IslandConfig(
+        aco=aco.ACOConfig(iterations=1, tau_dtype="bf16"), rounds=1)
+    with pytest.raises(kops.UnsupportedKernelRoute, match="island"):
+        islands.run_islands(inst, icfg, mesh)
+    mmesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("model",))
+    with pytest.raises(kops.UnsupportedKernelRoute, match="sharded"):
+        islands.run_sharded_colony(
+            inst, aco.ACOConfig(iterations=1, tau_dtype="int8"), mmesh)

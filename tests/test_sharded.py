@@ -10,6 +10,7 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -58,6 +59,46 @@ def test_pad_to_devices_phantom_slots():
         b.problem, states, budgets, since, 3)
     assert orig2 == 3 and bud2.shape == (3,)
     assert p2 is b.problem and s2 is states    # no-op when B % D == 0
+
+
+def test_pad_to_devices_quantised_leaves():
+    """Phantom padding replicates the quantised payload/scale leaves like
+    any other state leaf — row 0's int8 bits and per-row scales appear in
+    the phantom slot untouched."""
+    insts = [tsp.circle_instance(n, seed=n) for n in (10, 12, 14)]
+    cfg = aco.ACOConfig(tau_dtype="int8")
+    b = batch_mod.make_batch(insts, 16, cfg.nn_k)
+    states = engine.init_states(insts, cfg, [1, 2, 3], 16)
+    budgets = jnp.asarray([5, 6, 7], jnp.int32)
+    since = jnp.zeros_like(budgets)
+    _, s, bud, _, _, orig = placement.pad_to_devices(
+        b.problem, states, budgets, since, 4)
+    assert orig == 3 and int(bud[3]) == 0
+    assert s.tau.q.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(s.tau.q[3]),
+                                  np.asarray(s.tau.q[0]))
+    np.testing.assert_array_equal(np.asarray(s.tau.scale[3]),
+                                  np.asarray(s.tau.scale[0]))
+    assert s.tau.err.shape == (4, 16, 0)        # zero-width leaf padded too
+
+
+def test_sharded_one_device_mesh_bitwise_quantised():
+    """Quantised ColonyState leaves shard and gather like fp32 ones: the
+    D=1 mesh route is bitwise the plain route on every leaf."""
+    insts = [tsp.circle_instance(n, seed=n) for n in (10, 13, 12)]
+    cfg = aco.ACOConfig(iterations=6, selection="gumbel", tau_dtype="int8")
+    b = batch_mod.make_batch(insts, 16, cfg.nn_k)
+    budgets = jnp.asarray([6, 3, 5], jnp.int32)
+    ref, ref_since = engine.run_batch(
+        b.problem, engine.init_states(insts, cfg, [1, 2, 3], 16),
+        budgets, cfg, 6, patience=2)
+    got, got_since = engine.run_batch(
+        b.problem, engine.init_states(insts, cfg, [1, 2, 3], 16),
+        budgets, cfg, 6, patience=2, mesh=placement.data_mesh(1))
+    for a, c in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    np.testing.assert_array_equal(np.asarray(ref_since),
+                                  np.asarray(got_since))
 
 
 def test_data_mesh_bounds():
@@ -136,6 +177,50 @@ def test_sharded_run_batch_bitwise_parity_8dev():
                     np.testing.assert_array_equal(
                         np.asarray(ref_since), np.asarray(got_since))
         print("PARITY OK")
+    """)
+
+
+def test_sharded_quantised_run_batch_bitwise_8dev():
+    """Quantised (int8 + per-row scales, bf16) slot stacks shard across
+    8 devices and come back bitwise the single-device run on every leaf —
+    the QuantTau payload/scale/err leaves ride placement like any other
+    state leaf, uneven B % D padding included."""
+    _run_subprocess("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.core import aco, tsp
+        from repro.solver import batch as bm, engine, placement
+        assert len(jax.devices()) == 8, jax.devices()
+
+        insts = [tsp.circle_instance(n, seed=n) if k % 2 == 0
+                 else tsp.random_instance(n, seed=n)
+                 for k, n in enumerate((10, 13, 12, 15, 11))]
+        budgets = jnp.asarray([6, 3, 5, 2, 7], jnp.int32)
+        seeds = [40 + i for i in range(5)]
+        for tau_dtype in ("int8", "bf16"):
+            cfg = aco.ACOConfig(iterations=7, variant="mmas",
+                                selection="gumbel", tau_dtype=tau_dtype)
+            b = bm.make_batch(insts, 16, cfg.nn_k)
+            ref, ref_since = engine.run_batch(
+                b.problem, engine.init_states(insts, cfg, seeds, 16),
+                budgets, cfg, 7, patience=3)
+            assert jax.tree.leaves(ref.tau)[0].dtype == (
+                jnp.int8 if tau_dtype == "int8" else jnp.bfloat16)
+            for d in (2, 8):                 # both uneven: 5 % d != 0
+                got, got_since = engine.run_batch(
+                    b.problem,
+                    engine.init_states(insts, cfg, seeds, 16),
+                    budgets, cfg, 7, patience=3,
+                    mesh=placement.data_mesh(d))
+                for a, c in zip(jax.tree.leaves(ref),
+                                jax.tree.leaves(got)):
+                    a, c = np.asarray(a), np.asarray(c)
+                    if a.dtype == jnp.bfloat16:
+                        a = a.view(np.uint16); c = c.view(np.uint16)
+                    np.testing.assert_array_equal(
+                        a, c, err_msg=f"{tau_dtype} D={d}")
+                np.testing.assert_array_equal(
+                    np.asarray(ref_since), np.asarray(got_since))
+        print("QUANT PARITY OK")
     """)
 
 

@@ -259,6 +259,32 @@ def test_streaming_hyper_requires_flag():
         svc.submit(INSTS[0], hyper={"alpha": 2.0})
 
 
+# ------------------------------------------- quantised resident tau (§15)
+@pytest.mark.parametrize("tau_dtype", ["int8", "bf16"])
+def test_streaming_quantised_exactness_with_refill(tau_dtype):
+    """Quantised ColonyState leaves (int8/bf16 payload + per-row scales)
+    ride the same slot-surgery paths: 5 requests through 2 slots with
+    mid-run admission still reproduce their solo runs bitwise."""
+    cfg = aco.ACOConfig(iterations=max(BUDGETS), variant="mmas",
+                        selection="gumbel", tau_dtype=tau_dtype)
+    svc = streaming.StreamingSolverService(cfg, max_batch=2, min_bucket=16,
+                                           chunk=2)
+    for k in range(3):
+        svc.submit(INSTS[k], iterations=BUDGETS[k], seed=SEEDS[k])
+    results = list(svc.step()) + list(svc.step())
+    for k in range(3, 5):
+        svc.submit(INSTS[k], iterations=BUDGETS[k], seed=SEEDS[k])
+    results.extend(svc.run_until_drained())
+    assert len(results) == len(INSTS)
+    assert svc.stats["fills"] == len(INSTS)
+    by_id = {r.request_id: r for r in results}
+    for k, inst in enumerate(INSTS):
+        best_len, best_tour = _solo(inst, cfg, BUDGETS[k], SEEDS[k])
+        assert by_id[k].best_len == best_len, (tau_dtype, k)
+        np.testing.assert_array_equal(by_id[k].best_tour, best_tour)
+        assert tsp.is_valid_tour(by_id[k].best_tour)
+
+
 # ------------------------------------------------------------ trace replay
 def test_replay_retries_on_backpressure():
     """A bounded-queue service pushes back mid-replay; replay_trace must
