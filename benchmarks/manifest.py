@@ -23,6 +23,7 @@ MANIFEST_NAME = "BENCH_manifest.json"
 SCHEMA = "repro.bench_manifest/v1"
 
 BENCH_FILES = {
+    "coldstart": "BENCH_coldstart.json",
     "construction": "BENCH_construction.json",
     "obs": "BENCH_obs.json",
     "quality": "BENCH_quality.json",
@@ -38,6 +39,15 @@ def _row(rows: list, **match) -> Optional[dict]:
         if all(r.get(k) == v for k, v in match.items()):
             return r
     return None
+
+
+def _headline_coldstart(p: dict) -> dict:
+    return {"cold_p99_s": p["rows"]["cold"]["p99_s"],
+            "persist_p99_s": p["rows"]["persist"]["p99_s"],
+            "warmed_p99_s": p["rows"]["warmed"]["p99_s"],
+            "warmed_over_cold": p["warmed_over_cold"],
+            "persist_over_cold": p["persist_over_cold"],
+            "max_ratio_required": p["max_ratio_required"]}
 
 
 def _headline_construction(p: dict) -> dict:
@@ -113,6 +123,7 @@ def _headline_streaming(p: dict) -> dict:
 
 
 HEADLINES: dict[str, Callable[[dict], dict]] = {
+    "coldstart": _headline_coldstart,
     "construction": _headline_construction,
     "obs": _headline_obs,
     "quality": _headline_quality,

@@ -62,6 +62,16 @@ class Check:
 # machine load, so their bands are order-of-magnitude sanity floors
 # only.  Deterministic byte counts must match.
 CHECKS = [
+    # first-request cold start (BENCH_coldstart.json): the within-run
+    # ratios are the real guard — a warmed first request must stay far
+    # below a cold one (the warmup ladder's whole claim) and within its
+    # committed band; absolute latencies are cross-run wall clock
+    Check("coldstart", "warmed_over_cold", "lower", rel=1.0,
+          abs_slack=0.15),
+    Check("coldstart", "persist_over_cold", "lower", rel=1.0,
+          abs_slack=0.25),
+    Check("coldstart", "warmed_p99_s", "lower", rel=1.5, abs_slack=0.5),
+    Check("coldstart", "cold_p99_s", "lower", rel=1.5, abs_slack=2.0),
     # telemetry overhead (BENCH_obs.json)
     Check("obs", "overhead_pct", "lower", rel=0.0, abs_slack=6.0),
     Check("obs", "serving_overhead_pct", "lower", rel=0.0, abs_slack=6.0),
@@ -106,6 +116,11 @@ DEFAULT_BENCHES = ("obs", "streaming")
 
 
 # ------------------------------------------------------- fresh bench runs
+def _fresh_coldstart(out: str) -> None:
+    from . import coldstart
+    coldstart.main(coldstart.CASE, out_path=out)
+
+
 def _fresh_obs(out: str) -> None:
     from . import obs_overhead
     obs_overhead.main(obs_overhead.CASE, out_path=out)
@@ -142,6 +157,7 @@ def _fresh_quality(out: str) -> None:
 
 
 RUNNERS: dict[str, Callable[[str], None]] = {
+    "coldstart": _fresh_coldstart,
     "obs": _fresh_obs,
     "streaming": _fresh_streaming,
     "solver": _fresh_solver,

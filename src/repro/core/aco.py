@@ -30,6 +30,12 @@ class ACOConfig:
     variant: str = "as"            # as | mmas | acs
     construction: str = "data_parallel"
     selection: str = "iroulette"   # iroulette (paper) | gumbel (exact) | roulette
+    # Per-(ant, city) randomness derivation (core/sampling.py): "packed"
+    # keeps the historical flat-counter threefry draws; "counter" derives
+    # each element's bits from an explicit (ant, city) counter, making the
+    # draws invariant to the padded bucket width — the exactness basis of
+    # the AOT program cache's neighbour-bucket route (DESIGN.md §16).
+    draw_mode: str = "packed"      # packed | counter
     nn_k: int = 30                 # NN-list length (paper uses 30)
     deposit: str = "scatter"       # pheromone strategy (see pheromone.py)
     deposit_tile: int = 64
@@ -314,7 +320,7 @@ def colony_step(problem: Problem, state: ColonyState,
         method=method, selection=cfg.selection,
         nn=problem.nn, tau=tau_c, eta=problem.eta,
         alpha=alpha, beta=beta, n_actual=n_act,
-        tau_scale=tau_scale,
+        tau_scale=tau_scale, draw_mode=cfg.draw_mode,
     )
 
     pre_ls_lengths = None

@@ -16,15 +16,84 @@ Three selection semantics, matching DESIGN.md §2:
 
 All functions are batched: weights (..., n) -> choice (...,) int32. Invalid
 cities must already carry weight 0 (mask applied by the caller).
+
+Draw modes (DESIGN.md §16): the default "packed" draws use
+``jax.random.uniform(key, shape)``, whose threefry counters run over the
+*flat* index — bits at (ant, city) depend on the array width, so the same
+colony padded into a wider bucket draws different randomness.  "counter"
+mode derives each element's bits from an explicit (ant, city) counter
+(``counter_uniform``/``counter_gumbel``): the draw at a real (ant, city)
+pair is bitwise identical in every bucket width, which is what makes the
+neighbour-bucket route of the AOT program cache (solver/programs.py) exact.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
 _NEG_INF = -1e30
+
+# (ant, city) -> threefry counter stride: counters are i * 2^16 + j, so the
+# mapping is collision-free for any bucket width n <= 65536 (beyond paper
+# scale) and — unlike the packed flat index i * n + j — independent of n.
+COUNTER_STRIDE = 1 << 16
+
+
+def _key_data(key: Array) -> Array:
+    """Raw (2,) uint32 words of a PRNG key (typed or raw-array form)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return key
+
+
+def counter_bits(key: Array, shape: tuple) -> Array:
+    """Width-invariant uint32 random bits for a 2-D (m, n) draw.
+
+    Element (i, j) gets ``threefry2x32(key, i * COUNTER_STRIDE + j)`` —
+    the bits depend only on the key and the (ant, city) pair, never on the
+    array width, so ``counter_bits(key, (m, n))[:, :n0]`` equals
+    ``counter_bits(key, (m, n0))`` bitwise for any n >= n0.
+    """
+    m, n = shape
+    if n > COUNTER_STRIDE:
+        raise ValueError(f"counter draw width {n} > {COUNTER_STRIDE}")
+    from jax._src import prng as _prng
+    kd = _key_data(key)
+    rows = jnp.arange(m, dtype=jnp.uint32) * jnp.uint32(COUNTER_STRIDE)
+    ctr = rows[:, None] + jnp.arange(n, dtype=jnp.uint32)[None, :]
+    k0 = jnp.broadcast_to(kd[0], shape)
+    k1 = jnp.broadcast_to(kd[1], shape)
+    out = _prng.threefry2x32_p.bind(k0, k1, ctr,
+                                    jnp.zeros(shape, jnp.uint32))
+    return out[0]
+
+
+def _uniform_from_bits(bits: Array, minval: float, maxval: float) -> Array:
+    """bits -> U[minval, maxval) float32, the exact jax.random.uniform
+    mantissa construction (so values share its distribution and edge
+    behaviour: 9-bit shift into [1, 2), subtract 1, scale, clamp low)."""
+    flo = jax.lax.bitcast_convert_type(
+        (bits >> np.uint32(9)) | np.uint32(0x3F800000), jnp.float32)
+    flo = flo - np.float32(1.0)
+    return jnp.maximum(jnp.float32(minval),
+                       flo * (maxval - minval) + minval)
+
+
+def counter_uniform(key: Array, shape: tuple, minval: float = 0.0,
+                    maxval: float = 1.0) -> Array:
+    """Width-invariant U[minval, maxval) draw for 2-D (m, n) shapes."""
+    return _uniform_from_bits(counter_bits(key, shape), minval, maxval)
+
+
+def counter_gumbel(key: Array, shape: tuple) -> Array:
+    """Width-invariant standard Gumbel draw (the jax.random.gumbel map
+    -log(-log(U[tiny, 1))) over counter-mode uniforms)."""
+    tiny = float(np.finfo(np.float32).tiny)
+    u = counter_uniform(key, shape, minval=tiny, maxval=1.0)
+    return -jnp.log(-jnp.log(u))
 
 
 def roulette(key: Array, weights: Array) -> Array:
@@ -61,6 +130,20 @@ def greedy(key: Array, weights: Array) -> Array:
     return jnp.argmax(weights, axis=-1).astype(jnp.int32)
 
 
+def iroulette_counter(key: Array, weights: Array) -> Array:
+    """``iroulette`` with counter-mode (width-invariant) uniforms."""
+    u = counter_uniform(key, weights.shape, minval=1e-6, maxval=1.0)
+    return jnp.argmax(weights * u, axis=-1).astype(jnp.int32)
+
+
+def gumbel_counter(key: Array, weights: Array) -> Array:
+    """``gumbel`` with counter-mode (width-invariant) Gumbel noise."""
+    logw = jnp.where(weights > 0, jnp.log(jnp.maximum(weights, 1e-38)),
+                     _NEG_INF)
+    g = counter_gumbel(key, weights.shape)
+    return jnp.argmax(logw + g, axis=-1).astype(jnp.int32)
+
+
 SELECTORS = {
     "roulette": roulette,
     "iroulette": iroulette,
@@ -68,6 +151,28 @@ SELECTORS = {
     "greedy": greedy,
 }
 
+# Counter-mode selector table: ``roulette`` draws one U per *ant* — shape
+# (m, 1), already width-invariant given m — and ``greedy`` draws nothing,
+# so both map to themselves; only the per-(ant, city) draws get rewired.
+SELECTORS_COUNTER = {
+    "roulette": roulette,
+    "iroulette": iroulette_counter,
+    "gumbel": gumbel_counter,
+    "greedy": greedy,
+}
 
-def select(name: str, key: Array, weights: Array) -> Array:
-    return SELECTORS[name](key, weights)
+DRAW_MODES = ("packed", "counter")
+
+
+def get_selector(name: str, draw_mode: str = "packed"):
+    """Selector fn for (selection, draw_mode); KeyError on unknown name."""
+    if draw_mode not in DRAW_MODES:
+        raise ValueError(f"unknown draw_mode {draw_mode!r}; "
+                         f"supported: {', '.join(DRAW_MODES)}")
+    table = SELECTORS_COUNTER if draw_mode == "counter" else SELECTORS
+    return table[name]
+
+
+def select(name: str, key: Array, weights: Array,
+           draw_mode: str = "packed") -> Array:
+    return get_selector(name, draw_mode)(key, weights)

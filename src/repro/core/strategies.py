@@ -83,8 +83,8 @@ StepImpl = Callable[[Array, Array, TourState, int, dict], Array]
 # would retrace every time — observed as ~1.4 s/call of pure compile).
 
 
-def _make_dense_step(selector: str) -> StepImpl:
-    sel = sampling.SELECTORS[selector]
+def _make_dense_step(selector: str, draw_mode: str = "packed") -> StepImpl:
+    sel = sampling.get_selector(selector, draw_mode)
 
     def step(key, choice_info, st, t, extras):
         del t, extras
@@ -94,10 +94,11 @@ def _make_dense_step(selector: str) -> StepImpl:
     return step
 
 
-def _make_recompute_step(selector: str) -> StepImpl:
+def _make_recompute_step(selector: str, draw_mode: str = "packed"
+                         ) -> StepImpl:
     """Paper's baseline: recompute tau^a * eta^b for the current row each
     step (tau/eta/alpha/beta arrive as operands via ``extras``)."""
-    sel = sampling.SELECTORS[selector]
+    sel = sampling.get_selector(selector, draw_mode)
 
     def step(key, choice_info, st, t, extras):
         del choice_info, t
@@ -108,7 +109,8 @@ def _make_recompute_step(selector: str) -> StepImpl:
     return step
 
 
-def _make_nn_step(selector: str, lazy: bool = True) -> StepImpl:
+def _make_nn_step(selector: str, lazy: bool = True,
+                  draw_mode: str = "packed") -> StepImpl:
     """NN-list construction: sample among unvisited candidates; if the whole
     candidate set is visited, fall back to the best unvisited city by choice
     value (paper §II: 'selects the best neighbour according to eq. 1').
@@ -127,7 +129,7 @@ def _make_nn_step(selector: str, lazy: bool = True) -> StepImpl:
     identical in output — the fallback value is only consumed where
     ``have`` is False.
     """
-    sel = sampling.SELECTORS[selector]
+    sel = sampling.get_selector(selector, draw_mode)
 
     def step(key, choice_info, st, t, extras):
         del t
@@ -156,20 +158,31 @@ def _make_nn_step(selector: str, lazy: bool = True) -> StepImpl:
     return step
 
 
-def _make_pallas_step(selector: str) -> StepImpl:
+def _draw_step_uniform(key: Array, shape: tuple, dtype,
+                       draw_mode: str) -> Array:
+    """The per-(ant, city) uniform tensor the kernel steps consume: packed
+    (flat threefry counters, the historical bitwise behaviour) or counter
+    mode (width-invariant bits, solver/programs.py neighbour routing)."""
+    if draw_mode == "counter":
+        return sampling.counter_uniform(key, shape, minval=1e-6,
+                                        maxval=1.0).astype(dtype)
+    return jax.random.uniform(key, shape, dtype, minval=1e-6, maxval=1.0)
+
+
+def _make_pallas_step(selector: str, draw_mode: str = "packed") -> StepImpl:
     def step(key, choice_info, st, t, extras):
         del t
         from repro.kernels import ops as kops
         rows = choice_info[st.cur]
-        u = jax.random.uniform(key, rows.shape, rows.dtype,
-                               minval=1e-6, maxval=1.0)
+        u = _draw_step_uniform(key, rows.shape, rows.dtype, draw_mode)
         return kops.tour_select(rows, st.visited, u, selector,
                                 extras["n_actual"])
 
     return step
 
 
-def _make_fused_step(selector: str, alpha: float, beta: float) -> StepImpl:
+def _make_fused_step(selector: str, alpha: float, beta: float,
+                     draw_mode: str = "packed") -> StepImpl:
     """Fused choice->select kernel step (kernels/fused_select.py): the row
     gather, tau^alpha*eta^beta weighting, tabu/phantom masking and selection
     run in one pass over tiles — no (m, n) weight matrix, and no (n, n)
@@ -183,8 +196,8 @@ def _make_fused_step(selector: str, alpha: float, beta: float) -> StepImpl:
     def step(key, choice_info, st, t, extras):
         del choice_info, t
         from repro.kernels import ops as kops
-        u = jax.random.uniform(key, st.visited.shape, jnp.float32,
-                               minval=1e-6, maxval=1.0)
+        u = _draw_step_uniform(key, st.visited.shape, jnp.float32,
+                               draw_mode)
         # Quantised tau (core/quant.py): extras["tau"] carries the resident
         # int8/bf16 payload and the kernel dequantises per tile.  The
         # payload dtype is static at trace time, so passing the per-row
@@ -199,30 +212,34 @@ def _make_fused_step(selector: str, alpha: float, beta: float) -> StepImpl:
     return step
 
 
-_STEPS: dict[tuple[str, str], StepImpl] = {}
-for _sel in sampling.SELECTORS:
-    _STEPS[("data_parallel", _sel)] = _make_dense_step(_sel)
-    _STEPS[("task_choice", _sel)] = _make_dense_step(
-        "roulette" if _sel == "iroulette" else _sel)
-    _STEPS[("task_baseline", _sel)] = _make_recompute_step("roulette")
-    _STEPS[("nn_list", _sel)] = _make_nn_step(_sel)
-    _STEPS[("nn_list_eager", _sel)] = _make_nn_step(_sel, lazy=False)
-    _STEPS[("pallas", _sel)] = _make_pallas_step(_sel)
+_STEPS: dict[tuple[str, str, str], StepImpl] = {}
+for _dm in sampling.DRAW_MODES:
+    for _sel in sampling.SELECTORS:
+        _STEPS[("data_parallel", _sel, _dm)] = _make_dense_step(_sel, _dm)
+        _STEPS[("task_choice", _sel, _dm)] = _make_dense_step(
+            "roulette" if _sel == "iroulette" else _sel, _dm)
+        _STEPS[("task_baseline", _sel, _dm)] = \
+            _make_recompute_step("roulette", _dm)
+        _STEPS[("nn_list", _sel, _dm)] = _make_nn_step(_sel, draw_mode=_dm)
+        _STEPS[("nn_list_eager", _sel, _dm)] = \
+            _make_nn_step(_sel, lazy=False, draw_mode=_dm)
+        _STEPS[("pallas", _sel, _dm)] = _make_pallas_step(_sel, _dm)
 
 
 @partial(jax.jit, static_argnames=("n", "method", "selection", "masked",
-                                   "alpha_s", "beta_s"))
+                                   "alpha_s", "beta_s", "draw_mode"))
 def _construct(key: Array, choice_info: Array, dist: Array, start: Array,
                extras: dict, n: int, method: str,
                selection: str, masked: bool = False,
                alpha_s: Optional[float] = None,
-               beta_s: Optional[float] = None) -> TourResult:
+               beta_s: Optional[float] = None,
+               draw_mode: str = "packed") -> TourResult:
     # alpha_s/beta_s: static exponents for the fused kernel step only (its
     # closure is built per trace; the jit cache is keyed on their values).
     if method == "fused":
-        step_impl = _make_fused_step(selection, alpha_s, beta_s)
+        step_impl = _make_fused_step(selection, alpha_s, beta_s, draw_mode)
     else:
-        step_impl = _STEPS[(method, selection)]
+        step_impl = _STEPS[(method, selection, draw_mode)]
     st0 = _init_state(start, n)
     m = start.shape[0]
     ants = jnp.arange(m)
@@ -260,6 +277,7 @@ def construct_tours(
     step_impl: Optional[StepImpl] = None,
     n_actual: Optional[Array] = None,
     tau_scale: Optional[Array] = None,
+    draw_mode: str = "packed",
 ) -> TourResult:
     """Build m complete tours under the given strategy.
 
@@ -277,6 +295,9 @@ def construct_tours(
     (solver/); ant placement and selection are restricted to real cities and
     the phantom tail is emitted in fixed order. Returned lengths are masked
     real-tour lengths. Not supported for step_impl injection.
+    ``draw_mode``: "packed" (default, historical bitwise behaviour) or
+    "counter" — width-invariant per-(ant, city) randomness (sampling.py),
+    the exactness basis of neighbour-bucket routing (DESIGN.md §16).
     """
     n = dist.shape[0]
     masked = n_actual is not None
@@ -326,8 +347,11 @@ def construct_tours(
                 "fused construction kernel needs static alpha/beta; traced "
                 "per-instance exponents run the pure-JAX route")
         alpha_s, beta_s = float(alpha), float(beta)
+    if draw_mode not in sampling.DRAW_MODES:
+        raise ValueError(f"unknown draw_mode {draw_mode!r}; "
+                         f"supported: {', '.join(sampling.DRAW_MODES)}")
     return _construct(kc, choice_info, dist, start, extras, n, method,
-                      selection, masked, alpha_s, beta_s)
+                      selection, masked, alpha_s, beta_s, draw_mode)
 
 
 def choice_matrix(tau: Array, eta: Array, alpha, beta) -> Array:

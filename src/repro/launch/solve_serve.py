@@ -54,6 +54,23 @@ solution quality stays within 1% absolute of fp32 (benchmarks/quality
     PYTHONPATH=src python -m repro.launch.solve_serve --stream \\
         --tau-dtype int8 --num-instances 8 --chunk 2 --iterations 10
 
+AOT program cache (DESIGN.md §16): ``--warmup`` pre-compiles the bucket
+ladder for the [min_n, max_n] range before traffic (``--warmup-async``
+on a background thread; ``--bucket-ladder 16,32`` overrides the rungs),
+``--cache-dir`` enables the persistent XLA compilation cache so a
+restart pays a cache load instead of a compile, and ``--dry`` compiles
+the ladder, prints the program/cache stats as JSON and exits (the CI
+smoke).  ``--draw-mode counter --ants M`` makes the randomness
+bucket-width invariant, which lets admission neighbour-route an
+unwarmed bucket into the nearest larger warmed one bitwise-exactly:
+
+    PYTHONPATH=src python -m repro.launch.solve_serve --warmup \\
+        --cache-dir /tmp/xla-cache --num-instances 8 --iterations 20
+    PYTHONPATH=src python -m repro.launch.solve_serve --stream --warmup \\
+        --warmup-async --draw-mode counter --ants 32 --num-instances 8
+    PYTHONPATH=src python -m repro.launch.solve_serve --warmup --dry \\
+        --cache-dir /tmp/xla-cache
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.solve_serve \
         --num-instances 8 --min-n 12 --max-n 48 --iterations 20
@@ -80,8 +97,10 @@ from repro import obs
 from repro.core import aco, tsp
 from repro.kernels.ops import UnsupportedKernelRoute
 from repro.launch.mesh import make_data_mesh
-from repro.solver import (SolverService, StreamingSolverService,
-                          make_poisson_trace, replay_trace)
+from repro.solver import (ProgramCache, SolverService,
+                          StreamingSolverService, enable_persistent_cache,
+                          make_poisson_trace, persistent_cache_stats,
+                          replay_trace)
 
 
 def make_workload(num: int, min_n: int, max_n: int, seed: int):
@@ -254,11 +273,47 @@ def main() -> None:
                          "a single label, or a comma-separated list "
                          "cycled across the workload (labels never touch "
                          "the solve)")
+    # AOT program cache (solver/programs.py, DESIGN.md §16)
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the service's program for every "
+                         "bucket in [--min-n, --max-n] before admitting "
+                         "traffic, so no request pays a serve-time "
+                         "compile; warmed buckets also enable neighbour-"
+                         "bucket admission routing when the config's "
+                         "numerics are bucket-width invariant "
+                         "(--draw-mode counter with --ants pinned)")
+    ap.add_argument("--warmup-async", action="store_true",
+                    help="--warmup on a background thread: traffic is "
+                         "admitted immediately and falls back to the jit "
+                         "path until each bucket's compile lands")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent XLA compilation cache directory: "
+                         "compiled executables survive restarts, so the "
+                         "second cold start pays a cache load, not a "
+                         "compile")
+    ap.add_argument("--bucket-ladder", default=None,
+                    help="--warmup: explicit comma-separated bucket list "
+                         "(default: batch.bucket_ladder over "
+                         "[--min-n, --max-n])")
+    ap.add_argument("--dry", action="store_true",
+                    help="--warmup: compile the ladder, report program/"
+                         "cache stats as JSON and exit without running "
+                         "a workload (CI smoke)")
+    ap.add_argument("--draw-mode", default="packed",
+                    choices=["packed", "counter"],
+                    help="per-(ant, city) randomness derivation: "
+                         "'counter' makes draws invariant to the padded "
+                         "bucket width — required for neighbour-bucket "
+                         "routing (core/sampling.py)")
+    ap.add_argument("--ants", type=int, default=None,
+                    help="pin the ant count (default: m = n_pad); "
+                         "required for neighbour-bucket routing")
     args = ap.parse_args()
 
     cfg = aco.ACOConfig(iterations=args.iterations, variant=args.variant,
                         selection=args.selection,
                         local_search=args.local_search, seed=args.seed,
+                        m=args.ants, draw_mode=args.draw_mode,
                         use_pallas=args.use_pallas, sparse=args.sparse,
                         sparse_k=args.sparse_k,
                         sparse_overflow=args.sparse_overflow,
@@ -269,6 +324,40 @@ def main() -> None:
                         jax_profile_dir=args.jax_profile_dir)
     tenants = (args.tenant.split(",") if args.tenant else None)
     server = None
+
+    if args.dry and not args.warmup:
+        ap.error("--dry requires --warmup")
+    if args.cache_dir:
+        enable_persistent_cache(args.cache_dir)
+    programs = ProgramCache(telemetry=tel) if args.warmup else None
+    ladder = ([int(x) for x in args.bucket_ladder.split(",")]
+              if args.bucket_ladder else None)
+
+    def _warm(svc):
+        """Run the warmup ladder; with --dry, print the report and tell
+        the caller to skip the workload."""
+        if programs is None:
+            return False
+        t0 = time.perf_counter()
+        summary = svc.warm_programs(args.min_n, args.max_n, ladder=ladder,
+                                    background=args.warmup_async
+                                    and not args.dry)
+        warm_s = time.perf_counter() - t0
+        if not args.dry:
+            print(f"solve_serve: warmup "
+                  f"{'started (background)' if args.warmup_async else f'done in {warm_s:.2f}s'}",
+                  file=sys.stderr)
+            return False
+        report = {
+            "schema": "repro.solve_serve/v1",
+            "dry": True,
+            "warmup": summary,
+            "stats": {"programs": programs.stats()},
+        }
+        if args.cache_dir:
+            report["cache"] = persistent_cache_stats(args.cache_dir)
+        print(json.dumps(_round(report), indent=2), flush=True)
+        return True
 
     try:
         tel.profile_start()
@@ -281,8 +370,11 @@ def main() -> None:
                 chunk=args.chunk, patience=args.patience,
                 max_waiting=args.max_waiting,
                 per_instance_hyper=args.per_instance_hyper, mesh=mesh,
-                telemetry=tel, snapshot_every=args.stats_every)
+                telemetry=tel, snapshot_every=args.stats_every,
+                programs=programs)
             server = _start_metrics_server(args, tel, svc)
+            if _warm(svc):
+                return
             trace = make_poisson_trace(args.num_instances, args.arrival_rate,
                                        args.min_n, args.max_n,
                                        seed=args.seed,
@@ -297,8 +389,11 @@ def main() -> None:
                                 min_bucket=args.min_bucket,
                                 patience=args.patience,
                                 checkpoint_dir=args.checkpoint_dir,
-                                mesh=mesh, telemetry=tel)
+                                mesh=mesh, telemetry=tel,
+                                programs=programs)
             server = _start_metrics_server(args, tel, svc)
+            if _warm(svc):
+                return
             for i, inst in enumerate(make_workload(
                     args.num_instances, args.min_n, args.max_n, args.seed)):
                 svc.submit(inst, tenant=(tenants[i % len(tenants)]

@@ -13,15 +13,22 @@
                backpressure;
 - placement.py multi-device fabric: shard_map the engine's instance axis
                over a 1-D device mesh (phantom-slot padding for uneven
-               batches), place streaming pools per device.
+               batches), place streaming pools per device;
+- programs.py  ahead-of-time program cache: persistent XLA compile cache,
+               bucket-ladder warmup (AOT lower+compile before traffic)
+               and neighbour-bucket admission routing.
 
 See DESIGN.md §8 for the bucketing policy and masking invariants, §9 for
-the streaming slot lifecycle, §11 for the placement layer.
+the streaming slot lifecycle, §11 for the placement layer, §16 for the
+program cache.
 """
-from .batch import (ProblemBatch, bucket_size, make_batch,  # noqa: F401
-                    padded_problem)
+from .batch import (ProblemBatch, bucket_ladder, bucket_size,  # noqa: F401
+                    make_batch, padded_problem)
 from .engine import (init_state, init_states, run_batch,  # noqa: F401
                      solve_instances)
+from .programs import (ProgramCache, ProgramKey,  # noqa: F401
+                       check_neighbour_route, enable_persistent_cache,
+                       persistent_cache_stats)
 from .placement import data_mesh, run_batch_sharded  # noqa: F401
 from .service import SolveResult, SolverService  # noqa: F401
 from .streaming import (AdmissionError, StreamingPool,  # noqa: F401

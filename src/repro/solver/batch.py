@@ -42,6 +42,25 @@ def bucket_size(n: int, min_bucket: int = 16) -> int:
     return b
 
 
+def bucket_ladder(min_n: int, max_n: int, min_bucket: int = 16
+                  ) -> list[int]:
+    """Every bucket size instances in [min_n, max_n] can land in.
+
+    The single source of truth for bucket enumeration (DESIGN.md §16):
+    the AOT warmup pass (solver/programs.py) compiles exactly this ladder,
+    and the streaming/drain services admit into it — so "ladder warmed"
+    means "no serve-time compile for any in-range instance".
+    """
+    if max_n < min_n:
+        raise ValueError(f"max_n {max_n} < min_n {min_n}")
+    lo = bucket_size(min_n, min_bucket)
+    hi = bucket_size(max_n, min_bucket)
+    out = [lo]
+    while out[-1] < hi:
+        out.append(out[-1] * 2)
+    return out
+
+
 def padded_problem(instance: tsp.TSPInstance, n_pad: int,
                    nn_k: int = 30,
                    hyper: Optional[aco.Hyper] = None) -> aco.Problem:

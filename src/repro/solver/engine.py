@@ -164,11 +164,31 @@ _run_batch_donated = jax.jit(_run_batch_impl, static_argnames=_STATIC,
                              donate_argnums=(1, 6, 7))
 
 
+def aot_lower(problem, states, budgets: Array, cfg: aco.ACOConfig,
+              max_iters: int, patience: int, since: Array, mets=None,
+              kind: str = "dense", ewt: str = "EUC_2D",
+              donate: bool = False):
+    """AOT-lower the single-device batch program for these operands.
+
+    ``.compile()`` on the result yields an executable taking the dynamic
+    args positionally — ``(problem, states, budgets, since, mets)`` — and
+    bitwise identical to the jit path (same HLO pipeline, same donation);
+    the warmup ladder (solver/programs.py) compiles through here so first
+    requests skip the serve-time compile.
+    """
+    if donate:
+        _quiet_cpu_donation_warning()
+    fn = _run_batch_donated if donate else _run_batch_jit
+    return fn.lower(problem, states, budgets, cfg, max_iters, patience,
+                    since, mets, kind=kind, ewt=ewt)
+
+
 def run_batch(problem, states, budgets: Array,
               cfg: aco.ACOConfig, max_iters: int, patience: int = 0,
               since: Optional[Array] = None, donate: bool = False,
               mesh=None, instance_spec: str = "data",
-              kind: str = "dense", ewt: str = "EUC_2D", mets=None):
+              kind: str = "dense", ewt: str = "EUC_2D", mets=None,
+              programs=None):
     """Advance B colonies by up to ``max_iters`` more iterations each.
 
     budgets: (B,) int32 *absolute* per-instance iteration targets, compared
@@ -193,6 +213,12 @@ def run_batch(problem, states, budgets: Array,
     previous chunk (defaults to zeros) — returned updated as a third
     element ``(states, since, mets)`` so chunked metrics compose exactly;
     ignored (and the return stays ``(states, since)``) with metrics off.
+    programs: an attached ``programs.ProgramCache`` dispatches a warmed
+    signature's AOT executable directly (jit_cache_hit) and falls back to
+    the ordinary jit path otherwise (jit_cache_miss) — bitwise identical
+    either way.  On the mesh route dispatch stays with the placement
+    layer's own per-mesh cache; the program cache only keeps hit/miss
+    accounting.
     """
     if since is None:
         since = jnp.zeros_like(budgets)
@@ -210,12 +236,21 @@ def run_batch(problem, states, budgets: Array,
                                     local_search=cfg.local_search,
                                     construction=cfg.construction)
         from . import placement
+        if programs is not None:
+            from . import programs as programs_mod
+            programs.note_mesh_call(programs.signature(
+                problem, states, budgets, cfg, max_iters, patience,
+                donate, kind, ewt, mesh=programs_mod.mesh_label(mesh)))
         return placement.run_batch_sharded(problem, states, budgets, cfg,
                                            max_iters, patience, since, mesh,
                                            instance_spec, donate, mets)
     if donate:
         _quiet_cpu_donation_warning()
     fn = _run_batch_donated if donate else _run_batch_jit
+    if programs is not None:
+        return programs.call(fn, problem, states, budgets, cfg, max_iters,
+                             patience, since, mets, kind=kind, ewt=ewt,
+                             donate=donate)
     return fn(problem, states, budgets, cfg, max_iters, patience, since,
               mets, kind=kind, ewt=ewt)
 

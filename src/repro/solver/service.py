@@ -83,7 +83,8 @@ class SolverService:
                  patience: int = 0,
                  checkpoint_dir: Optional[str] = None,
                  ckpt_chunk: int = 25, mesh=None,
-                 telemetry: Optional[obs.Telemetry] = None):
+                 telemetry: Optional[obs.Telemetry] = None,
+                 programs=None):
         if cfg is None:
             cfg = aco.ACOConfig()
         if cfg.deposit not in pheromone.STRATEGIES:
@@ -118,6 +119,15 @@ class SolverService:
         # accounting over labeled registry families + a service birth
         # stamp for /healthz uptime.
         self.slo = obs.SloTracker(self.tel.registry)
+        # AOT program cache (solver/programs.py, DESIGN.md §16): when
+        # attached, jobs whose full static signature was warmed dispatch
+        # the precompiled executable; jobs are padded with budget-0
+        # phantom slots to ``max_batch`` so the batch width is canonical
+        # (batch-composition independence makes the padding exact), and
+        # admission may neighbour-route an unwarmed bucket into the
+        # nearest larger warmed one when the config's numerics are
+        # bucket-width invariant.
+        self.programs = programs
         self._t_started = time.perf_counter()
         self._queue: list[SolveRequest] = []
         self._next_id = 0
@@ -144,9 +154,41 @@ class SolverService:
         self.tel.events.emit("submit", request_id=rid, trace_id=trace_id,
                              tenant=obs.SloTracker.tenant_label(tenant),
                              n=instance.n,
-                             bucket=batch_mod.bucket_size(instance.n,
-                                                          self.min_bucket))
+                             bucket=self._route_bucket(instance.n))
         return rid
+
+    def _route_bucket(self, n: int) -> int:
+        """Admission bucket for an ``n``-city instance: the native
+        power-of-two bucket, possibly neighbour-routed into the nearest
+        larger warmed bucket by an attached program cache (bitwise-exact
+        per programs.check_neighbour_route)."""
+        native = batch_mod.bucket_size(n, self.min_bucket)
+        if self.programs is None:
+            return native
+        from . import programs as programs_mod
+        return self.programs.route_bucket(
+            native, self.cfg,
+            kind="sparse" if self.cfg.sparse else "dense",
+            mesh=programs_mod.mesh_label(self.mesh))
+
+    def warm_programs(self, min_n: int, max_n: int,
+                      background: bool = False, ladder=None):
+        """Precompile the drain job program for every bucket instances in
+        [min_n, max_n] can land in (batch.bucket_ladder; ``ladder``
+        overrides with an explicit bucket list).  Sets the program
+        cache's ``iters_cap`` (default: cfg.iterations) so jobs with
+        budgets under the cap share the warmed loop bound."""
+        if self.programs is None:
+            raise ValueError("no ProgramCache attached (programs=)")
+        if self.programs.iters_cap is None:
+            self.programs.iters_cap = self.cfg.iterations
+        if ladder is None:
+            ladder = batch_mod.bucket_ladder(min_n, max_n, self.min_bucket)
+        return self.programs.warm(
+            ladder, batch=self.max_batch, cfg=self.cfg,
+            max_iters=self.programs.iters_cap, patience=self.patience,
+            donate=False, kind="sparse" if self.cfg.sparse else "dense",
+            mesh=self.mesh, background=background)
 
     @property
     def pending(self) -> int:
@@ -175,7 +217,7 @@ class SolverService:
         with self.tel.tracer.span("bucket", requests=len(queue)):
             by_bucket: dict[int, list[SolveRequest]] = {}
             for req in queue:
-                b = batch_mod.bucket_size(req.instance.n, self.min_bucket)
+                b = self._route_bucket(req.instance.n)
                 by_bucket.setdefault(b, []).append(req)
 
         results: list[SolveResult] = []
@@ -200,6 +242,8 @@ class SolverService:
             "uptime_s": time.perf_counter() - self._t_started,
             "tenants": self.slo.summary(),
         }
+        if self.programs is not None:
+            self.stats["programs"] = self.programs.stats()
         return sorted(results, key=lambda r: r.request_id)
 
     # --------------------------------------------------------------- job
@@ -209,6 +253,21 @@ class SolverService:
         seeds = [r.seed for r in reqs]
         budgets_list = [r.iterations for r in reqs]
         max_it = max(budgets_list)
+        if self.programs is not None:
+            # Canonicalise the job's static signature to the warmed one:
+            # the loop bound rounds up to the cache's iters_cap (the
+            # while_loop exits on the done masks, so a larger bound never
+            # changes the trajectory), and the batch pads to max_batch
+            # with budget-0 phantom slots (frozen before their first
+            # step; batch-composition independence keeps the real slots
+            # bitwise).  collect() below zips against ``reqs`` only, so
+            # phantom rows never surface.
+            max_it = self.programs.effective_max_iters(max_it)
+            pad = self.max_batch - len(reqs)
+            if pad > 0:
+                instances = instances + [instances[0]] * pad
+                seeds = seeds + [0] * pad
+                budgets_list = budgets_list + [0] * pad
         job_id = self._jobs_run
         self._jobs_run += 1
 
@@ -262,13 +321,14 @@ class SolverService:
                         b.problem, st[0], budgets, self.cfg, chunk,
                         self.patience, st[1], mesh=self.mesh, kind=kind,
                         ewt=ewt,
-                        mets=st[2] if metrics_on else None))
+                        mets=st[2] if metrics_on else None,
+                        programs=self.programs))
                 out_st = sup.run()
             else:
                 out_st = engine.run_batch(b.problem, init(), budgets,
                                           self.cfg, max_it, self.patience,
                                           mesh=self.mesh, kind=kind,
-                                          ewt=ewt)
+                                          ewt=ewt, programs=self.programs)
             states = out_st[0]
             mets = out_st[2] if metrics_on else None
             states.best_len.block_until_ready()

@@ -91,6 +91,12 @@ class StreamRequest:
     # field reaches the solve (bitwise on==off, tests/test_serving.py).
     trace_id: str = ""
     tenant: Optional[str] = None
+    # Admission bucket, stamped once at submit: the native power-of-two
+    # bucket, or — with an attached program cache — the neighbour-routed
+    # warmed bucket (DESIGN.md §16).  Stamped rather than recomputed so a
+    # warmup finishing mid-queue can't re-route a request whose padded
+    # problem was already prepped for another width.
+    bucket: int = 0
     # Prepped at submit time (off the stepping critical path): the padded
     # Problem and fresh ColonyState the refill surgery writes into a slot.
     prob: Optional[aco.Problem] = None
@@ -121,11 +127,15 @@ class StreamingPool:
                  per_instance_hyper: bool = False, device=None,
                  telemetry: Optional[obs.Telemetry] = None,
                  dev_label: str = "dev0",
-                 slo: Optional[obs.SloTracker] = None):
+                 slo: Optional[obs.SloTracker] = None,
+                 programs=None):
         self.bucket = bucket
         self.slots = slots
         self.cfg = cfg
         self.patience = patience
+        # AOT program cache (solver/programs.py): chunk steps dispatch a
+        # warmed executable directly; None keeps the plain jit path.
+        self.programs = programs
         self.nn_k = cfg.nn_k if nn_k is None else nn_k
         self.per_instance_hyper = per_instance_hyper
         # Telemetry sink (DESIGN.md §13): standalone pools get a private
@@ -257,7 +267,8 @@ class StreamingPool:
                 self.tel.step_annotation("chunk_step", step_num=self.chunks):
             out = engine.run_batch(
                 self.problem, self.states, self.budgets, self.cfg, chunk,
-                self.patience, self.since, donate=True, mets=self.mets)
+                self.patience, self.since, donate=True, mets=self.mets,
+                programs=self.programs)
         if self.cfg.metrics:
             self.states, self.since, self.mets = out
         else:
@@ -380,7 +391,7 @@ class StreamingSolverService:
                  patience: int = 0, max_waiting: Optional[int] = None,
                  per_instance_hyper: bool = False, mesh=None,
                  telemetry: Optional[obs.Telemetry] = None,
-                 snapshot_every: float = 0.0):
+                 snapshot_every: float = 0.0, programs=None):
         if cfg is None:
             cfg = aco.ACOConfig()
         if cfg.use_pallas and per_instance_hyper:
@@ -446,6 +457,15 @@ class StreamingSolverService:
         # tracker shared by every pool, and a monotonic service birth
         # stamp every stats_snapshot carries as ``uptime_s``.
         self.slo = obs.SloTracker(self.tel.registry)
+        # AOT program cache (solver/programs.py, DESIGN.md §16): resident
+        # pools dispatch warmed chunk executables directly, and admission
+        # neighbour-routes an unwarmed bucket into the nearest larger
+        # warmed one when the config's numerics are bucket-width
+        # invariant (programs.check_neighbour_route).  Streaming pools
+        # always step full-width (slots = max_batch, loop bound = chunk,
+        # donated), so one warmed program per bucket covers every chunk
+        # the pool will ever dispatch.
+        self.programs = programs
         self._t_started = time.perf_counter()
         self._c_submitted = self.tel.registry.counter("submitted")
         self._c_rejected = self.tel.registry.counter("rejected")
@@ -509,21 +529,48 @@ class StreamingSolverService:
             submitted_at=now,
             expires_at=None if deadline is None else now + deadline,
             trace_id=uuid.uuid4().hex[:16], tenant=tenant)
+        req.bucket = self._route_bucket(instance.n)
         # Prep the padded problem + initial state at enqueue time (so
         # refill surgery on the stepping critical path is only .at[ix].set)
         # — but only within the bounded look-ahead window.
         if len(self._waiting) < self.prep_ahead:
-            req.prep(batch_mod.bucket_size(instance.n, self.min_bucket),
-                     self.cfg, self.cfg.nn_k)
+            req.prep(req.bucket, self.cfg, self.cfg.nn_k)
         self._waiting.append(req)
         self._c_submitted.inc()
         self.slo.on_submit(tenant)
         self.tel.events.emit(
             "submit", request_id=rid, trace_id=req.trace_id,
             tenant=obs.SloTracker.tenant_label(tenant), n=instance.n,
-            bucket=batch_mod.bucket_size(instance.n, self.min_bucket),
+            bucket=req.bucket,
             iterations=its, priority=priority, deadline=deadline)
         return rid
+
+    def _route_bucket(self, n: int) -> int:
+        """Admission bucket for an ``n``-city instance: the native
+        power-of-two bucket, possibly neighbour-routed into the nearest
+        larger warmed bucket by an attached program cache (bitwise-exact
+        per programs.check_neighbour_route)."""
+        native = batch_mod.bucket_size(n, self.min_bucket)
+        if self.programs is None:
+            return native
+        return self.programs.route_bucket(native, self.cfg, kind="dense")
+
+    def warm_programs(self, min_n: int, max_n: int,
+                      background: bool = False, ladder=None):
+        """Precompile the chunk-step program for every bucket instances
+        in [min_n, max_n] can land in (batch.bucket_ladder; ``ladder``
+        overrides with an explicit bucket list) — the exact signature the
+        resident pools dispatch: slots = max_batch, loop bound = chunk,
+        donated buffers, metrics per cfg.metrics."""
+        if self.programs is None:
+            raise ValueError("no ProgramCache attached (programs=)")
+        if ladder is None:
+            ladder = batch_mod.bucket_ladder(min_n, max_n, self.min_bucket)
+        return self.programs.warm(
+            ladder, batch=self.max_batch, cfg=self.cfg,
+            max_iters=self.chunk, patience=self.patience, donate=True,
+            kind="dense", hyper=self.per_instance_hyper,
+            background=background)
 
     @property
     def waiting(self) -> int:
@@ -540,13 +587,18 @@ class StreamingSolverService:
     # ---------------------------------------------------------- admission
     def _bucket_pools(self, bucket: int) -> list[StreamingPool]:
         if bucket not in self._pools:
+            # AOT dispatch only for the default-device pool: the warmed
+            # executables were compiled for the default device, and a
+            # pool committed elsewhere would fall back (exception per
+            # chunk) — those pools keep the plain jit path.
             self._pools[bucket] = [
                 StreamingPool(bucket, self.max_batch, self.cfg,
                               self.patience,
                               per_instance_hyper=self.per_instance_hyper,
                               device=dev, telemetry=self.tel,
                               dev_label=placement.device_label(dev, j),
-                              slo=self.slo)
+                              slo=self.slo,
+                              programs=self.programs if j == 0 else None)
                 for j, dev in enumerate(self._devices)]
         return self._pools[bucket]
 
@@ -566,7 +618,7 @@ class StreamingSolverService:
         free: dict[int, list[list[int]]] = {}   # bucket -> per-pool slots
         leftover: list[StreamRequest] = []
         for req in self._waiting:
-            b = batch_mod.bucket_size(req.instance.n, self.min_bucket)
+            b = req.bucket
             if b not in free:
                 free[b] = [p.free_slots() for p in self._bucket_pools(b)]
             # least-occupied == most free slots (all pools are same size);
@@ -585,9 +637,7 @@ class StreamingSolverService:
         # between chunks, not inside the surgery itself.
         for req in leftover[:self.prep_ahead]:
             if req.prob is None:
-                req.prep(batch_mod.bucket_size(req.instance.n,
-                                               self.min_bucket),
-                         self.cfg, self.cfg.nn_k)
+                req.prep(req.bucket, self.cfg, self.cfg.nn_k)
         return n
 
     # ----------------------------------------------------------- eviction
@@ -604,8 +654,7 @@ class StreamingSolverService:
             for req in self._waiting:
                 if req.expires_at is not None and req.expires_at <= now:
                     wait_s = now - req.submitted_at
-                    bucket = batch_mod.bucket_size(req.instance.n,
-                                                   self.min_bucket)
+                    bucket = req.bucket
                     out.append(SolveResult(
                         request_id=req.request_id, name=req.instance.name,
                         n=req.instance.n, bucket=bucket,
@@ -726,7 +775,10 @@ class StreamingSolverService:
         if self._t_first_submit is not None and \
                 self._t_last_harvest is not None:
             wall = self._t_last_harvest - self._t_first_submit
+        programs = ({"programs": self.programs.stats()}
+                    if self.programs is not None else {})
         return {
+            **programs,
             "submitted": self._c_submitted.value,
             "rejected": self._c_rejected.value,
             "completed": completed,

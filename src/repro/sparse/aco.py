@@ -130,12 +130,12 @@ def sparse_colony_step(problem: SparseProblem, state: SparseColonyState,
             k_tour, problem, state.tau, state.ovf_city, state.ovf_tau,
             state.best_tour, state.best_len, m, cfg.partial_window,
             cfg.selection, cfg.alpha, cfg.beta, ewt,
-            use_pallas=cfg.use_pallas)
+            use_pallas=cfg.use_pallas, draw_mode=cfg.draw_mode)
     else:
         res = construct.construct_sparse_tours(
             k_tour, problem, state.tau, state.ovf_city, state.ovf_tau, m,
             cfg.selection, cfg.alpha, cfg.beta, ewt,
-            use_pallas=cfg.use_pallas)
+            use_pallas=cfg.use_pallas, draw_mode=cfg.draw_mode)
 
     it_best_idx = jnp.argmin(res.lengths)
     it_best_len = res.lengths[it_best_idx]

@@ -43,7 +43,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant, strategies, tsp
+from repro.core import quant, sampling, strategies, tsp
 from repro.core.strategies import TourResult
 
 from . import store
@@ -122,7 +122,7 @@ def _score(w: Array, rand_full: Array, cities: Array, ants: Array,
 
 
 def _draw(key: Array, m: int, n: int, selection: str,
-          use_pallas: bool) -> Array:
+          use_pallas: bool, draw_mode: str = "packed") -> Array:
     """The full-width (m, n) stochastic tensor for this step.
 
     Pure route: the same draw (same key, shape, dtype) the dense *pure*
@@ -139,6 +139,15 @@ def _draw(key: Array, m: int, n: int, selection: str,
         if use_pallas:
             return jnp.zeros((m, n), jnp.float32)    # values ignored
         return jnp.zeros((1, 1), jnp.float32)        # unused
+    if draw_mode == "counter":
+        # Width-invariant (ant, city) counter bits (core/sampling.py):
+        # gathered entries match the dense *counter* route bit-for-bit,
+        # and the draw at a real pair is bucket-width independent — the
+        # neighbour-routing exactness basis (DESIGN.md §16).
+        if selection == "gumbel" and not use_pallas:
+            return sampling.counter_gumbel(key, (m, n))
+        return sampling.counter_uniform(key, (m, n), minval=1e-6,
+                                        maxval=1.0)
     if selection == "gumbel" and not use_pallas:
         return jax.random.gumbel(key, (m, n), jnp.float32)
     return jax.random.uniform(key, (m, n), jnp.float32,
@@ -164,12 +173,13 @@ class _SparseCarry(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("m", "selection", "alpha_beta", "ewt",
-                                   "masked", "use_pallas"))
+                                   "masked", "use_pallas", "draw_mode"))
 def _construct_sparse(key: Array, problem: SparseProblem, tau: Array,
                       ovf_city: Array, ovf_tau: Array, n_actual_op: Array,
                       m: int, selection: str, alpha_beta: tuple,
                       ewt: str, masked: bool,
-                      use_pallas: bool) -> TourResult:
+                      use_pallas: bool,
+                      draw_mode: str = "packed") -> TourResult:
     alpha, beta = alpha_beta
     n = problem.n
     kp, kc = jax.random.split(key)
@@ -182,7 +192,7 @@ def _construct_sparse(key: Array, problem: SparseProblem, tau: Array,
         k_ = jax.random.fold_in(kc, t)
         cities, tau_row, tau_scale, eta_row, dist_row = _candidate_page(
             problem, tau, ovf_city, ovf_tau, st.cur, ewt)
-        rand_full = _draw(k_, m, n, selection, use_pallas)
+        rand_full = _draw(k_, m, n, selection, use_pallas, draw_mode)
         if use_pallas:
             from repro.kernels import ops as kops
             pos, have = kops.sparse_select(
@@ -245,7 +255,8 @@ def _construct_sparse(key: Array, problem: SparseProblem, tau: Array,
 def construct_sparse_tours(key: Array, problem: SparseProblem, tau: Array,
                            ovf_city: Array, ovf_tau: Array, m: int,
                            selection: str, alpha: float, beta: float,
-                           ewt: str, use_pallas: bool = False) -> TourResult:
+                           ewt: str, use_pallas: bool = False,
+                           draw_mode: str = "packed") -> TourResult:
     """Build m complete tours from candidate pages only.
 
     tau (n, k) candidate-edge pheromone; ovf_city/ovf_tau (n, O) adopted
@@ -257,18 +268,19 @@ def construct_sparse_tours(key: Array, problem: SparseProblem, tau: Array,
     n_act = problem.n_actual if masked else jnp.asarray(problem.n, jnp.int32)
     return _construct_sparse(key, problem, tau, ovf_city, ovf_tau, n_act,
                              m, selection, (float(alpha), float(beta)),
-                             ewt, masked, use_pallas)
+                             ewt, masked, use_pallas, draw_mode)
 
 
 # ------------------------------------------------------------ Partial-ACO
 
 @partial(jax.jit, static_argnames=("m", "window", "selection", "alpha_beta",
-                                   "ewt", "use_pallas"))
+                                   "ewt", "use_pallas", "draw_mode"))
 def _partial_impl(key: Array, problem: SparseProblem, tau: Array,
                   ovf_city: Array, ovf_tau: Array, best_tour: Array,
                   best_len: Array, m: int, window: int, selection: str,
                   alpha_beta: tuple, ewt: str,
-                  use_pallas: bool) -> TourResult:
+                  use_pallas: bool,
+                  draw_mode: str = "packed") -> TourResult:
     alpha, beta = alpha_beta
     n = problem.n
     ants = jnp.arange(m)
@@ -289,7 +301,7 @@ def _partial_impl(key: Array, problem: SparseProblem, tau: Array,
         k_ = jax.random.fold_in(kc, t)
         cities, tau_row, tau_scale, eta_row, dist_row = _candidate_page(
             problem, tau, ovf_city, ovf_tau, st.cur, ewt)
-        rand_full = _draw(k_, m, n, selection, use_pallas)
+        rand_full = _draw(k_, m, n, selection, use_pallas, draw_mode)
         if use_pallas:
             from repro.kernels import ops as kops
             pos, have = kops.sparse_select(
@@ -345,7 +357,8 @@ def partial_tours(key: Array, problem: SparseProblem, tau: Array,
                   ovf_city: Array, ovf_tau: Array, best_tour: Array,
                   best_len: Array, m: int, window: int, selection: str,
                   alpha: float, beta: float, ewt: str,
-                  use_pallas: bool = False) -> TourResult:
+                  use_pallas: bool = False,
+                  draw_mode: str = "packed") -> TourResult:
     """Partial-ACO mutation: each ant reconstructs one bounded window of
     the running best tour via candidate-page selection.
 
@@ -360,4 +373,5 @@ def partial_tours(key: Array, problem: SparseProblem, tau: Array,
     window = max(1, min(window, problem.n - 2))
     return _partial_impl(key, problem, tau, ovf_city, ovf_tau, best_tour,
                          best_len, m, window, selection,
-                         (float(alpha), float(beta)), ewt, use_pallas)
+                         (float(alpha), float(beta)), ewt, use_pallas,
+                         draw_mode)
